@@ -1,0 +1,67 @@
+"""Appendix F: clustering schedules (ct = number of clusterings, cf =
+steps between clusterings).  The paper's findings to reproduce in
+miniature: more clusterings help; the model needs 'rest' after the last
+clustering (schedules that cluster too late do worse).
+
+Emits CSV rows: ct,cf,test_bce.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import dlrm_criteo
+from repro.data import ClickstreamConfig, clickstream_batches
+from repro.models import dlrm
+from repro.optim import sgd
+from repro.train.loop import (
+    Trainer, init_state, make_train_step, merge_buffers, split_buffers,
+)
+
+SCHEDULES = (  # (ct, cf) at 200 training steps
+    (0, 0),
+    (1, 60),
+    (2, 40),
+    (3, 40),
+    (3, 60),  # late clustering: little rest before the end
+)
+
+
+def run_schedule(ct, cf, *, steps=200, seed=0):
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=1024)
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    state = init_state(params, opt, dyn)
+    data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed)
+
+    def cluster_fn(key, p, b):
+        return dlrm.cluster_tables(key, p, b, cfg)
+
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static,
+                 clickstream_batches(data_cfg, 64),
+                 cluster_fn=cluster_fn if ct else None,
+                 cluster_every=cf, cluster_max=ct, seed=seed)
+    tr.run(steps)
+    test = next(clickstream_batches(data_cfg, 1024, host_id=1, n_hosts=2))
+    buffers = merge_buffers(tr.state.ebuf, tr.static_buffers)
+    return float(dlrm.bce_loss(tr.state.params, buffers, cfg, test))
+
+
+def main(out=print, steps=200, seeds=(0,)):
+    out("ct,cf,test_bce")
+    results = {}
+    for ct, cf in SCHEDULES:
+        bce = float(np.mean([run_schedule(ct, cf, steps=steps, seed=s)
+                             for s in seeds]))
+        results[(ct, cf)] = bce
+        out(f"{ct},{cf},{bce:.5f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

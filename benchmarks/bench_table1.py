@@ -1,0 +1,65 @@
+"""Table 1: Embedding-compression factor to reach baseline BCE.
+
+For each method, sweep parameter caps and find the smallest budget whose
+test BCE <= the full-table baseline's BCE (linear interpolation between
+sampled budgets, like the paper's extrapolation when no budget reaches it).
+Compression is measured both ways the paper reports it: over the summed
+vocabularies and over the largest table (§Reproducibility discusses the
+discrepancy between the two).
+
+Emits CSV rows: method,budget_needed,compression_sum,compression_largest.
+"""
+import numpy as np
+
+from benchmarks.bench_fig4 import train_one
+from repro.configs import dlrm_criteo
+
+METHODS = ("hash", "ce", "cce")
+BUDGETS = (256, 1024, 4096)
+
+
+def budget_to_reach(baseline_bce, budgets, bces):
+    """Smallest (interpolated) budget with bce <= baseline."""
+    for i, (b, v) in enumerate(zip(budgets, bces)):
+        if v <= baseline_bce:
+            if i == 0:
+                return b
+            b0, v0 = budgets[i - 1], bces[i - 1]
+            t = (v0 - baseline_bce) / max(v0 - v, 1e-9)
+            return b0 + t * (b - b0)
+    # extrapolate linearly from the last two points (the paper's optimistic
+    # bound); cap at 32x the largest tested budget
+    if len(bces) >= 2 and bces[-2] > bces[-1]:
+        slope = (bces[-1] - bces[-2]) / (budgets[-1] - budgets[-2])
+        need = budgets[-1] + (baseline_bce - bces[-1]) / slope
+        return min(max(need, budgets[-1]), 32 * budgets[-1])
+    return float("inf")
+
+
+def main(out=print, steps: int = 150, seeds=(0,)):
+    cfg0 = dlrm_criteo.reduced()
+    base_bces = [train_one("full", 0, steps=steps, seed=s)[0] for s in seeds]
+    baseline = float(np.mean(base_bces))
+    out(f"# full-table baseline BCE: {baseline:.5f}")
+    out("method,budget_needed,compression_sum,compression_largest")
+    results = {}
+    vocab_total = sum(v * cfg0.emb_dim for v in cfg0.vocab_sizes)
+    vmax = max(cfg0.vocab_sizes) * cfg0.emb_dim
+    for method in METHODS:
+        bces = [float(np.mean([train_one(method, b, steps=steps, seed=s)[0]
+                               for s in seeds])) for b in BUDGETS]
+        need = budget_to_reach(baseline, BUDGETS, bces)
+        if np.isinf(need):
+            out(f"{method},never,-,-")
+            results[method] = None
+            continue
+        cfg = dlrm_criteo.reduced(emb_method=method, cap=int(need))
+        comp_sum = vocab_total / max(1, cfg.n_emb_params())
+        comp_big = vmax / max(1, min(int(need), vmax))
+        results[method] = (need, comp_sum, comp_big)
+        out(f"{method},{need:.0f},{comp_sum:.1f},{comp_big:.1f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

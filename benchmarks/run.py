@@ -1,0 +1,51 @@
+"""Run every benchmark; print consolidated CSV.  One section per paper
+table/figure + the kernel microbench.  ``--fast`` trims training steps so
+the suite finishes in a few minutes on 1 CPU core (CI mode — the numbers
+stay directionally meaningful; full mode for the committed results).
+"""
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    steps = 60 if args.fast else 150
+
+    from benchmarks import (
+        bench_fig4,
+        bench_kernels,
+        bench_least_squares,
+        bench_schedules,
+        bench_table1,
+    )
+
+    seeds = (0,) if args.fast else (0, 1)
+    sections = {
+        "least_squares (Fig 1b/6/8, Thm 3.1)": lambda: bench_least_squares.main(),
+        "fig4 (BCE vs budget per method)": lambda: bench_fig4.main(
+            steps=steps, seeds=seeds),
+        "table1 (compression to baseline)": lambda: bench_table1.main(
+            steps=steps, seeds=seeds),
+        "schedules (Appendix F)": lambda: bench_schedules.main(
+            steps=max(120, steps)),
+        "kernels (microbench)": lambda: bench_kernels.main(),
+    }
+    for name, fn in sections.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the suite going, report at the end
+            print(f"SECTION FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            raise
+        print(f"# section time: {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+    reshard_restore,
+)

@@ -1,0 +1,43 @@
+"""Config registry: ``get(name)`` -> full-size ModelConfig;
+``get_reduced(name)`` -> CPU smoke-test variant of the same family."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    command_r_35b,
+    dlrm_criteo,
+    hymba_1_5b,
+    musicgen_medium,
+    paligemma_3b,
+    phi3_5_moe,
+    qwen2_1_5b,
+    qwen3_14b,
+    qwen3_4b,
+    qwen3_moe_235b,
+    xlstm_1_3b,
+)
+
+ARCHS = {
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "qwen3-14b": qwen3_14b.CONFIG,
+    "qwen2-1.5b": qwen2_1_5b.CONFIG,
+    "command-r-35b": command_r_35b.CONFIG,
+    "qwen3-4b": qwen3_4b.CONFIG,
+    "xlstm-1.3b": xlstm_1_3b.CONFIG,
+    "paligemma-3b": paligemma_3b.CONFIG,
+    "musicgen-medium": musicgen_medium.CONFIG,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe.CONFIG,
+}
+
+DLRM = dlrm_criteo.CONFIG
+
+
+def get(name: str, **overrides):
+    cfg = ARCHS[name]
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_reduced(name: str, **overrides):
+    return ARCHS[name].reduced(**overrides)

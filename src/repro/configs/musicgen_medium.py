@@ -1,0 +1,35 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens: 48L
+d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048 per codebook, 4
+codebooks.  [arXiv:2306.05284; hf]
+
+Backbone only per the brief: the EnCodec frontend is a stub — inputs are
+the 4 codebook token streams (delay pattern applied upstream); the model
+sums the 4 codebook embeddings per frame and predicts all 4 codebooks with
+separate heads.  Vanilla transformer details: LayerNorm, GELU, sinusoidal
+positions.
+
+Note: vocab 2048 x 4 codebooks = 8192 effective rows — CCE is applicable
+but pointless at this size (compression ~1x); config keeps the full table
+(DESIGN.md §Arch-applicability).
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    n_codebooks=4,
+    norm="layernorm",
+    act="gelu",
+    pos_emb="sinusoidal",
+    emb_method="full",
+    dtype=jnp.bfloat16,
+    train_microbatch=32,
+)

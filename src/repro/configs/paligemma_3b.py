@@ -1,0 +1,32 @@
+"""paligemma-3b [vlm] — gemma-2b text backbone: 18L d_model=2048 8H
+(MQA kv=1, head_dim=256) d_ff=16384 vocab=257216.  [arXiv:2407.07726; hf]
+
+The SigLIP vision frontend is a STUB per the brief: input_specs() provides
+precomputed patch embeddings (B, 256, d_model) which the backbone projects
+and prepends to the text sequence.  Gemma details: GELU MLP, sqrt(d)
+embedding scaling, tied input/output embeddings.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257216,
+    act="gelu",
+    emb_scale=True,
+    tie_embeddings=True,
+    n_patches=256,
+    rope_theta=10_000.0,
+    emb_method="cce",
+    emb_budget=257216 * 2048 // 16,
+    dtype=jnp.bfloat16,
+    train_microbatch=32,
+)

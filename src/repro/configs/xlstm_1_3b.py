@@ -1,0 +1,27 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304; sLSTM +
+mLSTM blocks at the xLSTM[7:1] ratio (1 sLSTM per 8 blocks).
+[arXiv:2405.04517; unverified]
+
+No KV cache at all — decode state is O(1) in sequence length, so this
+arch runs long_500k natively.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="xlstm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    slstm_every=8,
+    pos_emb="none",
+    emb_method="cce",
+    emb_budget=50304 * 2048 // 16,
+    dtype=jnp.bfloat16,
+    train_microbatch=32,
+)

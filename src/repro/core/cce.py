@@ -1,0 +1,237 @@
+"""Clustered Compositional Embeddings — Algorithm 3 of the paper.
+
+A CCE table with vocabulary ``d1``, output dim ``d2``, ``c`` columns and
+``2k`` rows per column (main table M indexed by a *learned* pointer array
+``h`` + helper table M' indexed by a *random* hash ``h'``):
+
+    lookup(id) = concat_i( M_i[h_i(id)] + M'_i[h'_i(id)] )
+
+``cluster()`` is the paper's training-time transition (Alg. 3, lines 10-17):
+per column, materialize (a sample of) the current vocab embeddings, K-means
+them into k centroids, set ``h_i <- assignments``, ``M_i <- centroids``,
+draw a fresh random ``h'_i`` and zero ``M'_i``.  The helper table restores
+the ability to differentiate ids the clustering merged; the next clustering
+can undo bad merges.
+
+State layout (chosen for the TPU kernels and for sharding):
+
+    params["tables"] : (c, 2, k, dsub)  — [:,0] main M, [:,1] helper M'
+    buffers["ptr"]   : (c, d1) int32    — learned pointer arrays h_i
+    buffers["hs"]    : c × (a, b)       — multiply-shift coeffs for h'_i
+
+The pointer arrays are plain int32 tensors: on a pod they are host-resident
+and ride the input pipeline (ids are translated to per-column rows on host,
+see DESIGN.md §4); on a single device they are gathered on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core import kmeans as km
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class CCE:
+    """Algorithm 3: CCE table with ``c`` columns and ``2k`` rows/column."""
+
+    d1: int
+    d2: int
+    k: int
+    c: int = 4
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert self.d2 % self.c == 0, (self.d2, self.c)
+        assert self.k >= 1
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, c=4, **kw):
+        # 2 tables of (k, d2/c) per column -> 2*k*d2 params total
+        k = max(1, min(d1, budget // (2 * d2)))
+        return cls(d1, d2, k=k, c=c, **kw)
+
+    @property
+    def dsub(self) -> int:
+        return self.d2 // self.c
+
+    @property
+    def n_params(self) -> int:
+        return 2 * self.k * self.d2
+
+    # --- init -----------------------------------------------------------
+
+    def init_buffers(self):
+        """Device-free buffer init (numpy): hash coefficients derive from
+        ``seed_salt`` so abstract (eval_shape) and real inits agree, and the
+        pointer table never touches a device mesh."""
+        ptr_hashes = hashing.make_hashes(self.seed_salt * 7919 + 66, self.c, self.k)
+        ids = np.arange(self.d1)
+        ptr = np.stack([h.np(ids) for h in ptr_hashes])  # (c, d1) int32
+        hs = tuple(
+            (h.a, h.b)
+            for h in hashing.make_hashes(self.seed_salt * 7919 + 77, self.c, self.k)
+        )
+        return {"ptr": ptr, "hs": hs, "epoch": 0}
+
+    def init(self, key):
+        km_ = jax.random.fold_in(key, self.seed_salt)
+        scale = 1.0 / math.sqrt(self.d2)
+        tables = (
+            jax.random.normal(km_, (self.c, 2, self.k, self.dsub)) * scale
+        ).astype(self.dtype)
+        buffers = self.init_buffers()
+        return {"tables": tables}, dict(buffers, ptr=jnp.asarray(buffers["ptr"]))
+
+    # --- lookup ---------------------------------------------------------
+
+    def _helper_rows(self, buffers, ids):
+        return jnp.stack(
+            [
+                hashing.MultiplyShiftHash(int(a), int(b), self.k)(ids)
+                for (a, b) in buffers["hs"]
+            ]
+        )  # (c, ...)
+
+    def _rows(self, buffers, ids):
+        """(c, ..., 2) int32 — main rows from the learned ptr, helper rows
+        from the random hash."""
+        main = buffers["ptr"][:, ids]  # (c, ...)
+        helper = self._helper_rows(buffers, ids)
+        return jnp.stack([main, helper], axis=-1)
+
+    def lookup(self, params, buffers, ids, *, use_kernel: bool = False):
+        rows = self._rows(buffers, ids)  # (c, ..., 2)
+        if use_kernel:
+            flat = rows.reshape(self.c, -1, 2)
+            out = kops.cce_lookup(flat, params["tables"])  # (B, c*dsub)
+            return out.reshape(*ids.shape, self.d2)
+        tabs = params["tables"]  # (c, 2, k, dsub)
+        main = jax.vmap(lambda t, r: t[r])(tabs[:, 0], rows[..., 0])
+        helper = jax.vmap(lambda t, r: t[r])(tabs[:, 1], rows[..., 1])
+        pieces = main + helper  # (c, ..., dsub)
+        return jnp.moveaxis(pieces, 0, -2).reshape(*ids.shape, self.d2)
+
+    def logits(self, params, buffers, h):
+        """Factored output head: per column a k-sized matmul + int gather.
+
+        logits[b, v] = sum_i  scores_i[b, h_i(v)] + scores'_i[b, h'_i(v)]
+        where scores_i = h_col_i @ M_i^T   (B, k).
+        """
+        hc = h.reshape(*h.shape[:-1], self.c, self.dsub)
+        all_ids = jnp.arange(self.d1)
+        rows = self._rows({"ptr": buffers["ptr"], "hs": buffers["hs"]}, all_ids)
+        out = 0.0
+        for i in range(self.c):
+            scores = hc[..., i, :] @ params["tables"][i].reshape(
+                2 * self.k, self.dsub
+            ).T  # (..., 2k)
+            out = out + scores[..., rows[i, :, 0]]
+            out = out + scores[..., self.k + rows[i, :, 1]]
+        return out
+
+    # --- the clustering transition (Alg. 3 lines 10-17) ------------------
+
+    def materialize(self, params, buffers, ids):
+        """Current embeddings of ``ids``, per column: (c, n, dsub)."""
+        rows = self._rows(buffers, ids)
+        tabs = params["tables"]
+        return jax.vmap(lambda t, r: t[r])(
+            tabs[:, 0], rows[..., 0]
+        ) + jax.vmap(lambda t, r: t[r])(tabs[:, 1], rows[..., 1])
+
+    def cluster(
+        self,
+        key,
+        params,
+        buffers,
+        *,
+        sample_ids: jax.Array | None = None,
+        niter: int = 50,
+        max_points_per_centroid: int = 256,
+    ):
+        """One CCE iteration: returns new (params, buffers).
+
+        K-means runs on a sample (FAISS-style, 256 pts/centroid by default,
+        paper §Reproducibility); assignments for the FULL vocab are then one
+        nearest-centroid pass per column.
+        """
+        k1, k2 = jax.random.split(jax.random.fold_in(key, buffers["epoch"]))
+        if sample_ids is None:
+            idx = km.subsample(k1, self.d1, self.k, max_points_per_centroid)
+            sample_ids = jnp.arange(self.d1)[idx] if idx.shape[0] != self.d1 else idx
+
+        sample = self.materialize(params, buffers, sample_ids)  # (c, n, dsub)
+        new_tables = []
+        new_ptr = []
+        all_ids = jnp.arange(self.d1)
+        for i in range(self.c):
+            res = km.kmeans(jax.random.fold_in(k2, i), sample[i], self.k, niter=niter)
+            # full-vocab assignment against the final centroids
+            full = self.materialize(params, buffers, all_ids)[i]
+            assignments = km.assign(full, res.centroids)
+            new_ptr.append(assignments)
+            helper = jnp.zeros((self.k, self.dsub), self.dtype)
+            new_tables.append(
+                jnp.stack([res.centroids.astype(self.dtype), helper])
+            )
+        # fresh random helper hashes
+        hs = tuple(
+            (h.a, h.b)
+            for h in hashing.make_hashes(
+                jax.random.fold_in(k2, 777), self.c, self.k
+            )
+        )
+        params = {"tables": jnp.stack(new_tables)}
+        buffers = {
+            "ptr": jnp.stack(new_ptr),
+            "hs": hs,
+            "epoch": buffers["epoch"] + 1,
+        }
+        return params, buffers
+
+    # --- diagnostics (Appendix H) ----------------------------------------
+
+    def collapse_entropies(self, buffers) -> dict[str, float]:
+        """H1 (min column entropy) and H2 (min pairwise entropy) of the
+        learned pointer table — the paper's table-collapse detectors.
+
+        H1 near log(k): healthy spread.  H1 near 0: column collapse.
+        H2 much below 2*log(k) (and below H1 + log(k)): pairwise collapse
+        (one column is a permutation of another).
+        """
+        ptr = np.asarray(buffers["ptr"])  # (c, d1)
+        c = ptr.shape[0]
+
+        def entropy(vals):
+            _, counts = np.unique(vals, return_counts=True)
+            p = counts / counts.sum()
+            return float(-(p * np.log(p)).sum())
+
+        h1 = min(entropy(ptr[i]) for i in range(c))
+        h2 = math.inf
+        for i in range(c):
+            for j in range(i + 1, c):
+                pair = ptr[i].astype(np.int64) * (ptr[j].max() + 1) + ptr[j]
+                h2 = min(h2, entropy(pair))
+        return {"H1": h1, "H2": h2 if c > 1 else float("nan"), "max_H1": math.log(self.k)}
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        """Dense H (d1, c*2k) for tests: one 1 per (column, table) block."""
+        ptr = np.asarray(buffers["ptr"])
+        helper = np.asarray(self._helper_rows(buffers, jnp.arange(self.d1)))
+        H = np.zeros((self.d1, self.c * 2 * self.k), np.float32)
+        rows = np.arange(self.d1)
+        for i in range(self.c):
+            base = i * 2 * self.k
+            H[rows, base + ptr[i]] = 1.0
+            H[rows, base + self.k + helper[i]] += 1.0
+        return H

@@ -1,0 +1,484 @@
+"""Every training-time table-compression method from the paper's Section 2,
+in its unified sketching framework:  T = H @ M,  lookup(i) = (e_i H) M.
+
+Each method is a frozen-config class with pure functional state:
+
+    method.init(key)                  -> (params, buffers)
+    method.lookup(params, buffers, i) -> (..., d2) embeddings
+    method.logits(params, buffers, h) -> (..., d1) factored output head
+    method.sketch_matrix(buffers)     -> dense H (d1, k) — tests only
+
+``params`` are trainable pytrees; ``buffers`` are non-trainable (hash
+coefficients, pointer arrays).  CCE itself lives in `core/cce.py` and
+shares this interface plus a `cluster()` transition.
+
+The factored ``logits`` head is a beyond-paper extension: for any linear
+sketch, <h, T[v]> = <h, (e_v H) M> = (h M^T) H^T[v] — a k-sized matmul
+plus a cheap integer gather, instead of a d1 x d2 matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+Params = Any
+Buffers = Any
+
+
+def _split_budget_rows(budget: int, d2: int, n_tables: int = 1) -> int:
+    return max(1, budget // (d2 * n_tables))
+
+
+@dataclasses.dataclass(frozen=True)
+class FullTable:
+    """The uncompressed baseline: one row per id."""
+
+    d1: int
+    d2: int
+    dtype: Any = jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        return self.d1 * self.d2
+
+    def init_buffers(self):
+        return {}
+
+    def init(self, key):
+        scale = 1.0 / math.sqrt(self.d2)
+        return {
+            "table": (jax.random.normal(key, (self.d1, self.d2)) * scale).astype(self.dtype)
+        }, {}
+
+    def lookup(self, params, buffers, ids):
+        return params["table"][ids]
+
+    def logits(self, params, buffers, h):
+        return h @ params["table"].T
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        return np.eye(self.d1, dtype=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class HashingTrick:
+    """Weinberger et al. 2009 — one hash, k rows shared across the vocab."""
+
+    d1: int
+    d2: int
+    k: int
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, **kw):
+        return cls(d1, d2, k=min(d1, _split_budget_rows(budget, d2)), **kw)
+
+    @property
+    def n_params(self) -> int:
+        return self.k * self.d2
+
+    def init_buffers(self):
+        """Device-free (numpy/int) buffer init — hash coefficients derive
+        from ``seed_salt`` so abstract (eval_shape) and real inits agree."""
+        h = hashing.make_hash(self.seed_salt * 7919 + 11, self.k)
+        return {"h": (h.a, h.b)}
+
+    def init(self, key):
+        km = jax.random.fold_in(key, self.seed_salt)
+        scale = 1.0 / math.sqrt(self.d2)
+        M = (jax.random.normal(km, (self.k, self.d2)) * scale).astype(self.dtype)
+        return {"M": M}, self.init_buffers()
+
+    def _rows(self, buffers, ids):
+        a, b = buffers["h"]
+        return hashing.MultiplyShiftHash(int(a), int(b), self.k)(ids)
+
+    def lookup(self, params, buffers, ids):
+        return params["M"][self._rows(buffers, ids)]
+
+    def logits(self, params, buffers, h):
+        scores = h @ params["M"].T  # (..., k)
+        rows = self._rows(buffers, jnp.arange(self.d1))
+        return scores[..., rows]
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        rows = np.asarray(self._rows(buffers, jnp.arange(self.d1)))
+        H = np.zeros((self.d1, self.k), np.float32)
+        H[np.arange(self.d1), rows] = 1.0
+        return H
+
+
+@dataclasses.dataclass(frozen=True)
+class HashEmbedding:
+    """Tito Svenstrup et al. 2017 — sum of ``n_hash`` rows (H has n_hash 1s/row)."""
+
+    d1: int
+    d2: int
+    k: int
+    n_hash: int = 2
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, **kw):
+        return cls(d1, d2, k=min(d1, _split_budget_rows(budget, d2)), **kw)
+
+    @property
+    def n_params(self) -> int:
+        return self.k * self.d2
+
+    def init_buffers(self):
+        hs = hashing.make_hashes(self.seed_salt * 7919 + 22, self.n_hash, self.k)
+        return {"hs": tuple((h.a, h.b) for h in hs)}
+
+    def init(self, key):
+        km = jax.random.fold_in(key, self.seed_salt)
+        scale = 1.0 / math.sqrt(self.d2 * self.n_hash)
+        M = (jax.random.normal(km, (self.k, self.d2)) * scale).astype(self.dtype)
+        return {"M": M}, self.init_buffers()
+
+    def _rows(self, buffers, ids):
+        return jnp.stack(
+            [
+                hashing.MultiplyShiftHash(int(a), int(b), self.k)(ids)
+                for (a, b) in buffers["hs"]
+            ],
+            axis=-1,
+        )  # (..., n_hash)
+
+    def lookup(self, params, buffers, ids):
+        rows = self._rows(buffers, ids)
+        return params["M"][rows].sum(axis=-2)
+
+    def logits(self, params, buffers, h):
+        scores = h @ params["M"].T
+        rows = self._rows(buffers, jnp.arange(self.d1))  # (d1, n_hash)
+        return sum(scores[..., rows[:, j]] for j in range(self.n_hash))
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        rows = np.asarray(self._rows(buffers, jnp.arange(self.d1)))
+        H = np.zeros((self.d1, self.k), np.float32)
+        for j in range(self.n_hash):
+            H[np.arange(self.d1), rows[:, j]] += 1.0
+        return H
+
+
+@dataclasses.dataclass(frozen=True)
+class CEConcat:
+    """Shi et al. 2020 compositional embeddings, hashed variant with
+    concatenation: c tables of (k, d2/c); block-diagonal M."""
+
+    d1: int
+    d2: int
+    k: int
+    c: int = 4
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert self.d2 % self.c == 0, (self.d2, self.c)
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, c=4, **kw):
+        return cls(d1, d2, k=min(d1, _split_budget_rows(budget, d2)), c=c, **kw)
+
+    @property
+    def dsub(self) -> int:
+        return self.d2 // self.c
+
+    @property
+    def n_params(self) -> int:
+        return self.k * self.d2
+
+    def init_buffers(self):
+        hs = hashing.make_hashes(self.seed_salt * 7919 + 33, self.c, self.k)
+        return {"hs": tuple((h.a, h.b) for h in hs)}
+
+    def init(self, key):
+        km = jax.random.fold_in(key, self.seed_salt)
+        scale = 1.0 / math.sqrt(self.d2)
+        tables = (
+            jax.random.normal(km, (self.c, self.k, self.dsub)) * scale
+        ).astype(self.dtype)
+        return {"tables": tables}, self.init_buffers()
+
+    def _rows(self, buffers, ids):
+        return jnp.stack(
+            [
+                hashing.MultiplyShiftHash(int(a), int(b), self.k)(ids)
+                for (a, b) in buffers["hs"]
+            ],
+            axis=0,
+        )  # (c, ...)
+
+    def lookup(self, params, buffers, ids):
+        rows = self._rows(buffers, ids)  # (c, ...)
+        pieces = jax.vmap(lambda tab, r: tab[r])(params["tables"], rows)
+        return jnp.moveaxis(pieces, 0, -2).reshape(*ids.shape, self.d2)
+
+    def logits(self, params, buffers, h):
+        hc = h.reshape(*h.shape[:-1], self.c, self.dsub)
+        rows = self._rows(buffers, jnp.arange(self.d1))  # (c, d1)
+        out = 0.0
+        for i in range(self.c):
+            scores = hc[..., i, :] @ params["tables"][i].T  # (..., k)
+            out = out + scores[..., rows[i]]
+        return out
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        """H (d1, c*k) against block-diagonal M."""
+        rows = np.asarray(self._rows(buffers, jnp.arange(self.d1)))
+        H = np.zeros((self.d1, self.c * self.k), np.float32)
+        for i in range(self.c):
+            H[np.arange(self.d1), i * self.k + rows[i]] = 1.0
+        return H
+
+
+@dataclasses.dataclass(frozen=True)
+class ROBE:
+    """Desai et al. 2022 — chunks read from one flat array with wrap-around."""
+
+    d1: int
+    d2: int
+    m: int  # flat array length
+    c: int = 4
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert self.d2 % self.c == 0
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, c=4, **kw):
+        return cls(d1, d2, m=max(d2, min(d1 * d2, budget)), c=c, **kw)
+
+    @property
+    def dsub(self) -> int:
+        return self.d2 // self.c
+
+    @property
+    def n_params(self) -> int:
+        return self.m
+
+    def init_buffers(self):
+        hs = hashing.make_hashes(self.seed_salt * 7919 + 44, self.c, self.m)
+        return {"hs": tuple((h.a, h.b) for h in hs)}
+
+    def init(self, key):
+        km = jax.random.fold_in(key, self.seed_salt)
+        scale = 1.0 / math.sqrt(self.d2)
+        flat = (jax.random.normal(km, (self.m,)) * scale).astype(self.dtype)
+        return {"flat": flat}, self.init_buffers()
+
+    def lookup(self, params, buffers, ids):
+        pieces = []
+        offs = jnp.arange(self.dsub)
+        for a, b in buffers["hs"]:
+            start = hashing.MultiplyShiftHash(int(a), int(b), self.m)(ids)
+            idx = (start[..., None] + offs) % self.m
+            pieces.append(params["flat"][idx])
+        return jnp.concatenate(pieces, axis=-1)
+
+    def logits(self, params, buffers, h):
+        # no small-matmul factorization (chunks overlap arbitrarily); chunked
+        # materialization keeps memory bounded.
+        return _chunked_logits(self, params, buffers, h)
+
+    def sketch_matrix(self, buffers) -> np.ndarray:
+        raise NotImplementedError("ROBE's H is structured over chunks; see tests")
+
+
+def _chunked_logits(method, params, buffers, h, chunk: int = 8192):
+    """Default output head: materialize vocab embeddings in chunks."""
+    d1 = method.d1
+    outs = []
+    for s in range(0, d1, chunk):
+        ids = jnp.arange(s, min(s + chunk, d1))
+        emb = method.lookup(params, buffers, ids)  # (chunk, d2)
+        outs.append(h @ emb.T)
+    return jnp.concatenate(outs, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DHE:
+    """Kang et al. 2021 Deep Hash Embeddings: n_hash pseudo-random features
+    in [-1,1] -> MLP with Mish.  Paper repro note: 2 hidden layers, width =
+    n_hash, solved from the parameter budget."""
+
+    d1: int
+    d2: int
+    width: int
+    n_hash: int
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, **kw):
+        # params ~= w*w + w*w + w*d2  (2 hidden layers of width w)
+        w = int((-d2 + math.sqrt(d2 * d2 + 8 * budget)) / 4)
+        w = max(8, w)
+        return cls(d1, d2, width=w, n_hash=w, **kw)
+
+    @property
+    def n_params(self) -> int:
+        w = self.width
+        return w * w + w * w + w * self.d2 + 2 * w + self.d2
+
+    def init_buffers(self):
+        rng = np.random.default_rng(self.seed_salt * 7919 + 55)
+        a = (rng.integers(0, 2**31 - 1, self.n_hash, dtype=np.int32) * 2 + 1).astype(np.int32)
+        b = rng.integers(0, 2**31 - 1, self.n_hash, dtype=np.int32)
+        return {"a": a, "b": b}
+
+    def init(self, key):
+        key = jax.random.fold_in(key, self.seed_salt)
+        _, k1, k2, k3 = jax.random.split(key, 4)
+        w = self.width
+        params = {
+            "w1": jax.random.normal(k1, (self.n_hash, w)) * (1 / math.sqrt(self.n_hash)),
+            "b1": jnp.zeros((w,)),
+            "w2": jax.random.normal(k2, (w, w)) * (1 / math.sqrt(w)),
+            "b2": jnp.zeros((w,)),
+            "w3": jax.random.normal(k3, (w, self.d2)) * (1 / math.sqrt(w)),
+            "b3": jnp.zeros((self.d2,)),
+        }
+        params = jax.tree.map(lambda x: x.astype(self.dtype), params)
+        return params, self.init_buffers()
+
+    def _features(self, buffers, ids):
+        x = ids.astype(jnp.uint32)[..., None]
+        h = x * buffers["a"].astype(jnp.uint32) + buffers["b"].astype(jnp.uint32)
+        h = (h ^ (h >> 15)) * jnp.uint32(2654435761)
+        h = h ^ (h >> 13)
+        return (h.astype(jnp.float32) / jnp.float32(2**31) - 1.0).astype(self.dtype)
+
+    def lookup(self, params, buffers, ids):
+        x = self._features(buffers, ids)
+        mish = lambda v: v * jnp.tanh(jax.nn.softplus(v))
+        x = mish(x @ params["w1"] + params["b1"])
+        x = mish(x @ params["w2"] + params["b2"])
+        return x @ params["w3"] + params["b3"]
+
+    def logits(self, params, buffers, h):
+        return _chunked_logits(self, params, buffers, h)
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorTrain:
+    """Yin et al. 2021 TT-Rec, 3-core tensor-train factorization."""
+
+    d1: int
+    d2: int
+    rank: int
+    seed_salt: int = 0
+    dtype: Any = jnp.float32
+
+    @classmethod
+    def from_budget(cls, d1, d2, budget, **kw):
+        q = cls._factor3(d1)
+        p = cls._factor3(d2)
+        # params(r) = q1*p1*r + q2*p2*r^2 + q3*p3*r
+        a = q[1] * p[1]
+        b = q[0] * p[0] + q[2] * p[2]
+        r = int((-b + math.sqrt(b * b + 4 * a * budget)) / (2 * a))
+        return cls(d1, d2, rank=max(1, r), **kw)
+
+    @staticmethod
+    def _factor3(n: int) -> tuple[int, int, int]:
+        """q1*q2*q3 >= n with qi ~ n^(1/3)."""
+        q = int(math.ceil(n ** (1 / 3)))
+        q1 = q
+        q2 = q
+        q3 = int(math.ceil(n / (q1 * q2)))
+        return (q1, q2, q3)
+
+    @property
+    def qs(self):
+        return self._factor3(self.d1)
+
+    @property
+    def ps(self):
+        # exact factorization of d2 into 3 factors (d2 is a model dim,
+        # typically highly composite)
+        d2 = self.d2
+        p1 = _largest_divisor_leq(d2, round(d2 ** (1 / 3)))
+        rest = d2 // p1
+        p2 = _largest_divisor_leq(rest, round(math.sqrt(rest)))
+        return (p1, p2, rest // p2)
+
+    @property
+    def n_params(self) -> int:
+        q, p, r = self.qs, self.ps, self.rank
+        return q[0] * p[0] * r + r * q[1] * p[1] * r + r * q[2] * p[2]
+
+    def init(self, key):
+        key = jax.random.fold_in(key, self.seed_salt)
+        q, p, r = self.qs, self.ps, self.rank
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = (1.0 / math.sqrt(self.d2)) ** (1 / 3)
+        params = {
+            "g1": jax.random.normal(k1, (q[0], p[0], r)) * s,
+            "g2": jax.random.normal(k2, (q[1], r, p[1], r)) * s,
+            "g3": jax.random.normal(k3, (q[2], r, p[2])) * s,
+        }
+        params = jax.tree.map(lambda x: x.astype(self.dtype), params)
+        return params, self.init_buffers()
+
+    def init_buffers(self):
+        return {}
+
+    def lookup(self, params, buffers, ids):
+        q, p = self.qs, self.ps
+        i1 = ids // (q[1] * q[2])
+        i2 = (ids // q[2]) % q[1]
+        i3 = ids % q[2]
+        g1 = params["g1"][i1]  # (..., p1, r)
+        g2 = params["g2"][i2]  # (..., r, p2, r)
+        g3 = params["g3"][i3]  # (..., r, p3)
+        x = jnp.einsum("...ar,...rbs->...abs", g1, g2)  # (..., p1, p2, r)
+        x = jnp.einsum("...abs,...sc->...abc", x, g3)  # (..., p1, p2, p3)
+        return x.reshape(*ids.shape, self.d2)
+
+    def logits(self, params, buffers, h):
+        return _chunked_logits(self, params, buffers, h)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+METHODS = {
+    "full": FullTable,
+    "hash": HashingTrick,
+    "hemb": HashEmbedding,
+    "ce": CEConcat,
+    "robe": ROBE,
+    "dhe": DHE,
+    "tt": TensorTrain,
+}
+
+
+def make_table(method: str, d1: int, d2: int, budget: int | None = None, **kw):
+    """Factory: budget-driven construction of any method (incl. 'cce')."""
+    if method == "cce":
+        from repro.core.cce import CCE
+
+        return CCE.from_budget(d1, d2, budget, **kw)
+    if method == "full":
+        kw.pop("c", None)
+        return FullTable(d1, d2, **kw)
+    cls = METHODS[method]
+    if method in ("hash", "hemb", "dhe", "tt"):
+        kw.pop("c", None)
+    return cls.from_budget(d1, d2, budget, **kw)

@@ -1,0 +1,138 @@
+"""Universal hashing and count-sketch utilities (Appendix D of the paper).
+
+Multiply-shift hashing (Dietzfelbinger et al., 1997): h(x) = (a*x + b) >> s,
+computed in uint32/uint64 arithmetic so a hash function is two integers —
+"very cheap to store" per the paper.  All functions are pure jnp and
+vectorize over id arrays, so they run on device or host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# 64-bit multiply-shift needs uint64; enable x64 ops locally via astype —
+# jax defaults to 32-bit, so we build the hash out of 32-bit multiplies.
+
+_MERSENNE = np.uint32(2654435761)  # Knuth's multiplicative constant
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiplyShiftHash:
+    """h : [d1] -> [m].  Stored as (a, b) uint32 pairs; odd `a`."""
+
+    a: int
+    b: int
+    m: int  # range
+
+    def __call__(self, ids: jax.Array) -> jax.Array:
+        x = ids.astype(jnp.uint32)
+        h = x * jnp.uint32(self.a) + jnp.uint32(self.b)
+        # fibonacci-style mix then reduce to range; m need not be a power of 2
+        h = (h ^ (h >> 15)) * _MERSENNE
+        h = h ^ (h >> 13)
+        # map to [0, m) by modulo — bias is O(m / 2^32), irrelevant for the
+        # table sizes here, and it avoids uint64 (not available w/o x64).
+        return (h % jnp.uint32(self.m)).astype(jnp.int32)
+
+    def np(self, ids: np.ndarray) -> np.ndarray:
+        """Pure-numpy twin (bit-exact with __call__) — host-side pointer
+        translation and device-free buffer init."""
+        with np.errstate(over="ignore"):
+            x = np.asarray(ids).astype(np.uint32)
+            h = x * np.uint32(self.a) + np.uint32(self.b)
+            h = (h ^ (h >> np.uint32(15))) * _MERSENNE
+            h = h ^ (h >> np.uint32(13))
+            return (h % np.uint32(self.m)).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignHash:
+    """s : [d1] -> {-1, +1} for count-sketch."""
+
+    a: int
+    b: int
+
+    def __call__(self, ids: jax.Array) -> jax.Array:
+        x = ids.astype(jnp.uint32)
+        h = x * jnp.uint32(self.a) + jnp.uint32(self.b)
+        h = (h ^ (h >> 16)) * _MERSENNE
+        return jnp.where((h >> jnp.uint32(31)) > 0, 1, -1).astype(jnp.int32)
+
+
+def _seed_of(key) -> int:
+    """Derive a python-int seed from a PRNG key.  Abstract-safe: under
+    eval_shape/jit tracing the coefficients fall back to a fixed seed —
+    hash ints are static metadata and never appear in abstract shapes, so
+    this only ever matters for the (concrete) real init path."""
+    try:
+        data = np.asarray(key)
+    except Exception:
+        try:
+            data = np.asarray(jax.random.key_data(key))
+        except Exception:  # tracer — fixed fallback
+            return 0x5EED
+    return int(data.astype(np.uint64).sum())
+
+
+def make_hash(key, m: int) -> MultiplyShiftHash:
+    """Sample a multiply-shift hash with range ``m``.  ``key`` may be a PRNG
+    key (concrete or abstract) or a python int seed."""
+    seed = key if isinstance(key, int) else _seed_of(key)
+    rng = np.random.default_rng(seed)
+    # 31-bit coefficients: eval_shape must be able to type returned ints
+    # as int32; the LSB mask keeps `a` odd (multiply-shift requirement).
+    a = (int(rng.integers(0, 2**31 - 1)) * 2 + 1) & 0x7FFFFFFF
+    b = int(rng.integers(0, 2**31 - 1)) & 0x7FFFFFFF
+    return MultiplyShiftHash(a=a, b=b, m=m)
+
+
+def make_sign_hash(key) -> SignHash:
+    seed = key if isinstance(key, int) else _seed_of(key)
+    rng = np.random.default_rng(seed ^ 0xABCDEF)
+    a = (int(rng.integers(0, 2**31 - 1)) * 2 + 1) & 0x7FFFFFFF
+    b = int(rng.integers(0, 2**31 - 1)) & 0x7FFFFFFF
+    return SignHash(a=a, b=b)
+
+
+def make_hashes(key, n: int, m: int) -> list[MultiplyShiftHash]:
+    seed = key if isinstance(key, int) else _seed_of(key)
+    return [make_hash(seed * 1_000_003 + i, m) for i in range(n)]
+
+
+# --- count-sketch as an explicit (sparse) linear map ------------------------
+
+
+def countsketch_matrix(key: jax.Array, d1: int, k: int, signed: bool = True) -> np.ndarray:
+    """Materialize the d1 x k count-sketch matrix H (for tests / tiny d1).
+
+    H[j, h(j)] = s(j); one nonzero per row (Charikar et al. 2002).
+    """
+    kh, ks = jax.random.split(key)
+    h = make_hash(kh, k)
+    s = make_sign_hash(ks)
+    ids = jnp.arange(d1)
+    rows = np.asarray(h(ids))
+    signs = np.asarray(s(ids)) if signed else np.ones(d1, np.int32)
+    H = np.zeros((d1, k), np.float32)
+    H[np.arange(d1), rows] = signs
+    return H
+
+
+@partial(jax.jit, static_argnums=(2,))
+def apply_countsketch(x: jax.Array, hs: tuple[int, int, int, int], k: int) -> jax.Array:
+    """Sketch a batch of one-hot-ish sparse vectors given by integer ids.
+
+    For CCE we only ever sketch basis vectors e_i, so the sketch of ``ids``
+    is just (row, sign) pairs; this helper returns the dense k-vector sum
+    for testing norm-preservation properties.
+    """
+    a, b, sa, sb = hs
+    h = MultiplyShiftHash(a, b, k)
+    s = SignHash(sa, sb)
+    rows = h(x)
+    signs = s(x).astype(jnp.float32)
+    return jax.ops.segment_sum(signs, rows, num_segments=k)

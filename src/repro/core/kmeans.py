@@ -1,0 +1,145 @@
+"""K-means in JAX: kmeans++ init, Lloyd iterations, minibatch sampling,
+and a distributed (data-parallel, psum) variant for pod-scale clustering.
+
+This replaces the paper's FAISS dependency.  Following the paper's
+reproducibility notes we default to ``niter=50`` and subsample to
+``max_points_per_centroid=256`` points per centroid.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, d)
+    assignments: jax.Array  # (n,) int32
+    inertia: jax.Array  # () sum of squared distances
+
+
+def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(n, k) squared distances, MXU-friendly expansion."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)  # (n, 1)
+    cn = jnp.sum(c * c, axis=-1)  # (k,)
+    return xn + cn[None, :] - 2.0 * x @ c.T
+
+
+def assign(x: jax.Array, c: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    """Nearest-centroid assignment.  ``use_kernel`` routes through the
+    Pallas kmeans_assign kernel (interpret-mode on CPU)."""
+    if use_kernel:
+        return kops.kmeans_assign(x, c)
+    return jnp.argmin(_sq_dists(x, c), axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def kmeans_plus_plus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """kmeans++ seeding (sequential, lax.fori_loop)."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    d2 = jnp.sum((x - first) ** 2, axis=-1)
+
+    def body(i, carry):
+        centroids, d2, key = carry
+        key, kc = jax.random.split(key)
+        p = d2 / jnp.maximum(d2.sum(), 1e-30)
+        idx = jax.random.choice(kc, n, p=p)
+        c = x[idx]
+        centroids = centroids.at[i].set(c)
+        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
+        return centroids, d2, key
+
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, d2, key))
+    return centroids
+
+
+def _lloyd_step(x, centroids, k):
+    a = assign(x, centroids)
+    onehot = jax.nn.one_hot(a, k, dtype=x.dtype)  # (n, k)
+    counts = onehot.sum(axis=0)  # (k,)
+    sums = onehot.T @ x  # (k, d)
+    new_c = sums / jnp.maximum(counts[:, None], 1.0)
+    # keep empty clusters where they were
+    new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
+    inertia = jnp.sum((x - new_c[a]) ** 2)
+    return new_c, a, inertia
+
+
+@partial(jax.jit, static_argnames=("k", "niter"))
+def kmeans(
+    key: jax.Array,
+    x: jax.Array,
+    k: int,
+    niter: int = 50,
+) -> KMeansResult:
+    """Full-batch Lloyd's algorithm with kmeans++ init."""
+    x = x.astype(jnp.float32)
+    centroids = kmeans_plus_plus(key, x, k)
+
+    def body(_, carry):
+        c, _, _ = carry
+        return _lloyd_step(x, c, k)
+
+    a0 = jnp.zeros((x.shape[0],), jnp.int32)
+    centroids, a, inertia = jax.lax.fori_loop(
+        0, niter, body, (centroids, a0, jnp.float32(0))
+    )
+    return KMeansResult(centroids, a, inertia)
+
+
+def subsample(key: jax.Array, n: int, k: int, max_points_per_centroid: int = 256):
+    """FAISS-style subsampling: train on at most 256*k points (paper §Repro)."""
+    cap = max_points_per_centroid * k
+    if n <= cap:
+        return jnp.arange(n)
+    return jax.random.choice(key, n, (cap,), replace=False)
+
+
+# --- distributed k-means -----------------------------------------------------
+# Each data-parallel shard holds a slice of the sample.  One Lloyd iteration:
+# local assignment, local (sum, count) moments, psum over the data axis,
+# identical centroid update on every shard.  Used by the pod-scale training
+# loop; on 1 device it degenerates to the serial algorithm.
+
+
+def distributed_lloyd_iter(x_local: jax.Array, centroids: jax.Array, k: int, axis_name: str):
+    a = assign(x_local, centroids)
+    onehot = jax.nn.one_hot(a, k, dtype=x_local.dtype)
+    counts = jax.lax.psum(onehot.sum(axis=0), axis_name)
+    sums = jax.lax.psum(onehot.T @ x_local, axis_name)
+    new_c = sums / jnp.maximum(counts[:, None], 1.0)
+    new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
+    return new_c, a
+
+
+def distributed_kmeans(
+    key: jax.Array,
+    x_local: jax.Array,
+    k: int,
+    axis_name: str,
+    niter: int = 50,
+) -> tuple[jax.Array, jax.Array]:
+    """Run inside shard_map/pmap over ``axis_name``.  Seeds from the first
+    shard's local sample (kmeans++ on local slice is a standard approximation)."""
+    x_local = x_local.astype(jnp.float32)
+    centroids = kmeans_plus_plus(key, x_local, k)
+    # make the seed identical on all shards: average is wrong, so broadcast
+    # shard 0's seed via pmean of (seed * is_shard0 * n_shards)
+    idx = jax.lax.axis_index(axis_name)
+    centroids = jax.lax.psum(
+        jnp.where(idx == 0, centroids, jnp.zeros_like(centroids)), axis_name
+    )
+
+    def body(_, c):
+        c, _ = distributed_lloyd_iter(x_local, c, k, axis_name)
+        return c
+
+    centroids = jax.lax.fori_loop(0, niter, body, centroids)
+    return centroids, assign(x_local, centroids)

@@ -1,0 +1,160 @@
+"""Dense and Sparse CCE for Least Squares — Algorithms 1 & 2 and the
+machinery of Theorem 3.1.
+
+Problem: given X (n, d1), Y (n, d2), find T minimizing ||X T - Y||_F^2
+without ever storing a d1 x d2 matrix.  We keep T factored as H @ M with
+H (d1, k) sparse-or-random and M (k, d2) dense, k << d1.
+
+Dense CCE (Alg. 1, proven):  H_i = [T_{i-1} | G_i] with G_i fresh Gaussian
+noise; M_i solves the k-dim least squares; T_i = H_i M_i.  Theorem 3.1:
+
+    E||X T_i - Y||^2 <= (1 - rho)^{i(k-d2)} ||X T*||^2 + ||X T* - Y||^2,
+    rho = sigma_min(X)^2 / ||X||_F^2.
+
+"Smart noise" variant (Appendix B): G_i = V Sigma^{-1} G' aligned with the
+SVD of X improves the rate to (1 - 1/d1)^{i(k-d2)}.
+
+Sparse CCE (Alg. 2, what the full system builds on):  instead of carrying
+T_{i-1} densely, K-means it into k/2 clusters -> assignment matrix A
+(one-hot, sparse) and combine with a fresh count-sketch C:
+H_i = [A | C]; M_i again solved exactly.  The factored representation
+(assignments + centroids) is all that's ever stored.
+
+Everything here is pure jnp and runs on CPU in seconds at the paper's
+Figure-1b scale (n=1e4, d1=1e3, d2=10).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core import kmeans as km
+
+
+class LSTrace(NamedTuple):
+    losses: jax.Array  # (iters+1,) ||X T_i - Y||_F^2
+    T: jax.Array  # final (d1, d2)
+
+
+def _solve_M(XH: jax.Array, Y: jax.Array) -> jax.Array:
+    """argmin_M ||XH M - Y||_F^2 via lstsq (k x k normal equations)."""
+    return jnp.linalg.lstsq(XH, Y)[0]
+
+
+def loss(X, T, Y) -> jax.Array:
+    return jnp.sum((X @ T - Y) ** 2)
+
+
+def optimal_loss(X, Y) -> tuple[jax.Array, jax.Array]:
+    T_star = jnp.linalg.lstsq(X, Y)[0]
+    return loss(X, T_star, Y), T_star
+
+
+def theorem_bound(X, Y, k: int, iters: int) -> jax.Array:
+    """The RHS of Theorem 3.1 per iteration: (1-rho)^{i(k-d2)}||XT*||^2 + opt."""
+    d2 = Y.shape[1]
+    sig = jnp.linalg.svd(X, compute_uv=False)
+    rho = sig[-1] ** 2 / jnp.sum(sig**2)
+    opt, T_star = optimal_loss(X, Y)
+    xt2 = jnp.sum((X @ T_star) ** 2)
+    i = jnp.arange(iters + 1)
+    return (1 - rho) ** (i * (k - d2)) * xt2 + opt
+
+
+def dense_cce(
+    key,
+    X: jax.Array,
+    Y: jax.Array,
+    k: int,
+    iters: int,
+    *,
+    smart_noise: bool = False,
+    identity_prefix: bool = True,
+) -> LSTrace:
+    """Algorithm 1.  ``smart_noise`` uses the SVD-aligned G (Appendix B);
+    ``identity_prefix=False`` restricts M to the form [I | M'] analysed in
+    the proof ("half noise" in Figure 6) — the default optimizes M fully."""
+    n, d1 = X.shape
+    d2 = Y.shape[1]
+    assert d1 > k > d2, (d1, k, d2)
+    T = jnp.zeros((d1, d2), X.dtype)
+    losses = [loss(X, T, Y)]
+    if smart_noise:
+        _, S, Vt = jnp.linalg.svd(X, full_matrices=False)
+        VSinv = Vt.T / S[None, :]
+    for i in range(iters):
+        key, kg = jax.random.split(key)
+        G = jax.random.normal(kg, (d1, k - d2), X.dtype)
+        if smart_noise:
+            G = VSinv @ jax.random.normal(kg, (VSinv.shape[1], k - d2), X.dtype)
+        H = jnp.concatenate([T, G], axis=1)  # (d1, k)
+        if identity_prefix:
+            M = _solve_M(X @ H, Y)
+        else:
+            # M = [I | M'], only M' optimized (the proof's weaker move)
+            Mp = _solve_M(X @ G, Y - X @ T)
+            M = jnp.concatenate([jnp.eye(d2, dtype=X.dtype), Mp], axis=0)
+        T = H @ M
+        losses.append(loss(X, T, Y))
+    return LSTrace(jnp.stack(losses), T)
+
+
+def sparse_cce(
+    key,
+    X: jax.Array,
+    Y: jax.Array,
+    k: int,
+    iters: int,
+    *,
+    kmeans_iters: int = 25,
+) -> LSTrace:
+    """Algorithm 2.  T is only ever stored factored: assignments (d1,) int
+    plus centroids (k/2, d2), combined with a fresh count-sketch each round.
+    """
+    n, d1 = X.shape
+    d2 = Y.shape[1]
+    kc = k // 2  # rows given to the clustered part A
+    ks = k - kc  # rows given to the count-sketch part C
+    T = jnp.zeros((d1, d2), X.dtype)
+    losses = [loss(X, T, Y)]
+    for i in range(iters):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        # --- line 5: cluster the rows of the (implicit) T ---------------
+        res = km.kmeans(k1, T, kc, niter=kmeans_iters)
+        A_rows = res.assignments  # (d1,) int32 — the sparse A
+        # --- line 6: fresh count-sketch C --------------------------------
+        h = hashing.make_hash(k2, ks)
+        s = hashing.make_sign_hash(k3)
+        ids = jnp.arange(d1)
+        C_rows = h(ids)
+        C_signs = s(ids).astype(X.dtype)
+        # --- line 7: solve for M on the sketched problem ----------------
+        # X @ H where H = [A | C]:
+        # X (n, d1) @ A (d1, kc): (XA)[:, j] = sum_{i: a_i = j} X[:, i]
+        XA = jax.vmap(
+            lambda xrow: jax.ops.segment_sum(xrow, A_rows, num_segments=kc)
+        )(X)
+        XC = jax.vmap(
+            lambda xrow: jax.ops.segment_sum(xrow * C_signs, C_rows, num_segments=ks)
+        )(X)
+        XH = jnp.concatenate([XA, XC], axis=1)  # (n, k)
+        M = _solve_M(XH, Y)  # (k, d2)
+        # --- reconstruct T = H M without materializing H -----------------
+        T = M[A_rows] + C_signs[:, None] * M[kc + C_rows]
+        losses.append(loss(X, T, Y))
+    return LSTrace(jnp.stack(losses), T)
+
+
+def kmeans_factorize(key, T: jax.Array, k: int, ones_per_row: int = 1, niter: int = 50):
+    """Post-hoc factorization T ~= H M via K-means (the comparison line in
+    Figure 1b): 1 one per row = plain PQ on the whole row; 2 ones per row =
+    residual step (cluster, then cluster the residuals)."""
+    res = km.kmeans(key, T, k if ones_per_row == 1 else k // 2, niter=niter)
+    if ones_per_row == 1:
+        return res.centroids[res.assignments]
+    resid = T - res.centroids[res.assignments]
+    res2 = km.kmeans(jax.random.fold_in(key, 1), resid, k // 2, niter=niter)
+    return res.centroids[res.assignments] + res2.centroids[res2.assignments]

@@ -1,0 +1,77 @@
+"""Post-training Product Quantization — the paper's post-hoc baseline
+(Figure 4a's "Product Quantization" line).
+
+PQ splits the trained table T (d1, d2) into c column blocks and K-means
+each block into k codewords: T ~= concat_i( M_i[h_i(id)] ).  Unlike CCE it
+can only run AFTER training — it never reduces training memory, and
+fine-tuning the codebooks post-PQ overfits immediately (paper §4, Fig. 4a).
+
+The quantized table is exactly a CE-concat structure, so it shares the
+lookup/logits code path with `core/embeddings.CEConcat`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as km
+
+
+@dataclasses.dataclass(frozen=True)
+class PQResult:
+    codebooks: Any  # (c, k, d2/c)
+    assignments: Any  # (c, d1) int32
+    mse: float
+
+
+def product_quantize(
+    key,
+    table: jax.Array,
+    k: int,
+    c: int = 4,
+    *,
+    niter: int = 50,
+    sample: int | None = None,
+) -> PQResult:
+    """Quantize a trained table into c codebooks of k codewords each."""
+    d1, d2 = table.shape
+    assert d2 % c == 0
+    dsub = d2 // c
+    blocks = table.reshape(d1, c, dsub)
+    codebooks, assigns = [], []
+    mse = 0.0
+    for i in range(c):
+        x = blocks[:, i]
+        ki = jax.random.fold_in(key, i)
+        if sample is not None and sample < d1:
+            idx = jax.random.choice(ki, d1, (sample,), replace=False)
+            res = km.kmeans(ki, x[idx], k, niter=niter)
+            a = km.assign(x, res.centroids)
+        else:
+            res = km.kmeans(ki, x, k, niter=niter)
+            a = res.assignments
+        codebooks.append(res.centroids)
+        assigns.append(a)
+        mse += float(jnp.mean((x - res.centroids[a]) ** 2))
+    return PQResult(
+        codebooks=jnp.stack(codebooks),
+        assignments=jnp.stack(assigns),
+        mse=mse / c,
+    )
+
+
+def pq_lookup(pq: PQResult, ids: jax.Array) -> jax.Array:
+    """Reconstruct embeddings for ``ids`` from the PQ codebooks."""
+    c, k, dsub = pq.codebooks.shape
+    rows = pq.assignments[:, ids]  # (c, ...)
+    pieces = jax.vmap(lambda tab, r: tab[r])(pq.codebooks, rows)
+    return jnp.moveaxis(pieces, 0, -2).reshape(*ids.shape, c * dsub)
+
+
+def pq_table(pq: PQResult) -> jax.Array:
+    """The full reconstructed table (tests / small vocabs only)."""
+    d1 = pq.assignments.shape[1]
+    return pq_lookup(pq, jnp.arange(d1))

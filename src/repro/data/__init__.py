@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    ClickstreamConfig,
+    clickstream_batches,
+    lm_token_batches,
+    planted_embedding_model,
+)

@@ -1,0 +1,136 @@
+"""Fused CCE multi-column embedding lookup as a Pallas TPU kernel.
+
+TPU adaptation of the paper's hot loop (`concat_i M_i[h_i(id)] + M'_i[h'_i(id)]`,
+Algorithm 3 line 8).  GPUs do this with a memory-bound sparse gather; TPUs
+have no fast random gather but a 128x128 systolic MXU, so we express the
+gather as a *blocked one-hot matmul*:
+
+    M[idx]  ==  onehot(idx) @ M
+
+The one-hot block ``(B_blk, k_blk)`` is built in-register from an
+``iota == idx`` comparison (it never exists in HBM), multiplied against an
+``M`` tile staged in VMEM by the BlockSpec pipeline, and accumulated over
+k-blocks.  The CCE sum over the main + helper table fuses into the same
+accumulation loop, so the 2c gathers of Algorithm 3 are a single kernel
+launch.  The backward scatter-add is the transposed matmul
+``onehot.T @ dout`` — same trick, and deterministic (no GPU-style atomics).
+
+Grid: (c columns, B/B_blk batch blocks, k/k_blk codebook blocks); the
+k axis is innermost so the output block revisits and accumulates.
+
+VMEM working set per step (defaults B_blk=256, k_blk=512, dsub<=512 f32):
+  tables tile  T*k_blk*dsub*4  = 2*512*128*4  = 512 KiB
+  out tile     B_blk*dsub*4    = 256*128*4    = 128 KiB
+  idx tile     B_blk*T*4       = 2 KiB          (SMEM-resident scalars)
+well under the ~16 MiB/core VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_B_BLK = 256
+DEFAULT_K_BLK = 512
+
+
+def _fwd_kernel(idx_ref, tab_ref, out_ref, *, k_blk: int, n_tables: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[0]  # (B_blk, T) int32, global row ids
+    local = idx - j * k_blk  # row ids relative to this k block
+    b_blk = idx.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b_blk, k_blk), 1)
+    acc = jnp.zeros((b_blk, out_ref.shape[-1]), jnp.float32)
+    for t in range(n_tables):
+        onehot = (local[:, t : t + 1] == iota).astype(tab_ref.dtype)
+        acc += jnp.dot(
+            onehot, tab_ref[0, t], preferred_element_type=jnp.float32
+        )
+    out_ref[...] += acc[:, None, :].astype(out_ref.dtype)
+
+
+def _bwd_kernel(idx_ref, dout_ref, dtab_ref, *, k_blk: int):
+    """dM[i, t] = onehot(idx[i,:,t]).T @ dout[:, i] — grid (c, T, nk, nb)."""
+    b = pl.program_id(3)
+
+    @pl.when(b == 0)
+    def _init():
+        dtab_ref[...] = jnp.zeros_like(dtab_ref)
+
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+    idx = idx_ref[0, :, t]  # (B_blk,)
+    local = idx - j * k_blk
+    b_blk = idx.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b_blk, k_blk), 1)
+    onehot = (local[:, None] == iota).astype(dout_ref.dtype)  # (B_blk, k_blk)
+    dout = dout_ref[:, 0, :]  # (B_blk, dsub)
+    dtab_ref[0, 0] += jnp.dot(
+        onehot.T, dout, preferred_element_type=jnp.float32
+    ).astype(dtab_ref.dtype)
+
+
+def cce_lookup_fwd_pallas(
+    idx: jax.Array,
+    tables: jax.Array,
+    *,
+    b_blk: int = DEFAULT_B_BLK,
+    k_blk: int = DEFAULT_K_BLK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Forward lookup.  idx (c, B, T) int32; tables (c, T, k, dsub).
+
+    Returns (B, c, dsub).  B % b_blk == 0 and k % k_blk == 0 are required —
+    `ops.cce_lookup` pads.
+    """
+    c, B, T = idx.shape
+    _, _, k, dsub = tables.shape
+    assert B % b_blk == 0 and k % k_blk == 0, (B, b_blk, k, k_blk)
+    grid = (c, B // b_blk, k // k_blk)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, k_blk=k_blk, n_tables=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b_blk, T), lambda i, b, j: (i, b, 0)),
+            pl.BlockSpec((1, T, k_blk, dsub), lambda i, b, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_blk, 1, dsub), lambda i, b, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, c, dsub), tables.dtype),
+        interpret=interpret,
+    )(idx, tables)
+
+
+def cce_lookup_bwd_pallas(
+    idx: jax.Array,
+    dout: jax.Array,
+    k: int,
+    *,
+    b_blk: int = DEFAULT_B_BLK,
+    k_blk: int = DEFAULT_K_BLK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Backward scatter-add.  idx (c, B, T); dout (B, c, dsub) -> dtables
+    (c, T, k, dsub)."""
+    c, B, T = idx.shape
+    dsub = dout.shape[-1]
+    assert B % b_blk == 0 and k % k_blk == 0
+    grid = (c, T, k // k_blk, B // b_blk)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, k_blk=k_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b_blk, T), lambda i, t, j, b: (i, b, 0)),
+            pl.BlockSpec((b_blk, 1, dsub), lambda i, t, j, b: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k_blk, dsub), lambda i, t, j, b: (i, t, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, T, k, dsub), dout.dtype),
+        interpret=interpret,
+    )(idx, dout)

@@ -1,0 +1,85 @@
+"""Nearest-centroid assignment as a Pallas TPU kernel.
+
+The inner loop of the paper's clustering step (Algorithm 3 line 13).
+``argmin_j ||x - c_j||^2`` expands to ``argmin_j (||c_j||^2 - 2 <x, c_j>)``
+(the ``||x||^2`` term is constant in j), i.e. a blocked X @ C.T on the MXU
+fused with a running (min, argmin) accumulator — only the (n,) assignment
+vector ever leaves the kernel, the (n, k) distance matrix is never
+materialized in HBM.
+
+Grid: (n/n_blk, k/k_blk), k innermost; running best distance + index are
+carried in the two output refs (revisited across the k axis).
+
+VMEM per step (defaults n_blk=256, k_blk=512, d<=512 f32): x tile 512 KiB,
+c tile 1 MiB, outputs 2 KiB — double-buffers comfortably in 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_N_BLK = 256
+DEFAULT_K_BLK = 512
+
+
+def _kernel(x_ref, c_ref, cn_ref, best_ref, arg_ref, *, k_blk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, jnp.inf)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (n_blk, d)
+    c = c_ref[...].astype(jnp.float32)  # (k_blk, d)
+    cn = cn_ref[...].astype(jnp.float32)  # (k_blk, 1) precomputed ||c||^2
+    # partial squared distance (missing ||x||^2, constant in j)
+    d2 = cn[:, 0][None, :] - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    local_best = jnp.min(d2, axis=-1)  # (n_blk,)
+    local_arg = jnp.argmin(d2, axis=-1).astype(jnp.int32) + j * k_blk
+    prev_best = best_ref[:, 0]
+    prev_arg = arg_ref[:, 0]
+    take_new = local_best < prev_best
+    best_ref[:, 0] = jnp.where(take_new, local_best, prev_best)
+    arg_ref[:, 0] = jnp.where(take_new, local_arg, prev_arg)
+
+
+def kmeans_assign_pallas(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    n_blk: int = DEFAULT_N_BLK,
+    k_blk: int = DEFAULT_K_BLK,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x (n, d), centroids (k, d) -> (assignments (n,) int32, partial-d2 (n,)).
+
+    n % n_blk == 0 and k % k_blk == 0 required (`ops.kmeans_assign` pads).
+    """
+    n, d = x.shape
+    k, _ = centroids.shape
+    assert n % n_blk == 0 and k % k_blk == 0, (n, n_blk, k, k_blk)
+    cn = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    grid = (n // n_blk, k // k_blk)
+    best, arg = pl.pallas_call(
+        functools.partial(_kernel, k_blk=k_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_blk, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_blk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((k_blk, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_blk, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_blk, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, centroids, cn)
+    return arg[:, 0], best[:, 0]

@@ -1,0 +1,142 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: shape padding to block multiples, interpret-mode fallback on CPU
+(this container validates kernels with interpret=True; on TPU the same
+code path compiles to Mosaic), and custom VJPs (the backward of the
+one-hot-matmul gather is the transposed one-hot matmul — a deterministic
+scatter-add on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import cce_lookup as _cl
+from repro.kernels import kmeans_assign as _ka
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# --- cce_lookup ---------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _cce_lookup(idx: jax.Array, tables: jax.Array, b_blk: int, k_blk: int):
+    return _cce_lookup_fwd(idx, tables, b_blk, k_blk)[0]
+
+
+def _cce_lookup_fwd(idx, tables, b_blk, k_blk):
+    c, B, T = idx.shape
+    _, _, k, dsub = tables.shape
+    B_pad = _round_up(B, b_blk)
+    k_pad = _round_up(k, k_blk)
+    idx_p = jnp.pad(idx, ((0, 0), (0, B_pad - B), (0, 0)))
+    tab_p = jnp.pad(tables, ((0, 0), (0, 0), (0, k_pad - k), (0, 0)))
+    out = _cl.cce_lookup_fwd_pallas(
+        idx_p, tab_p, b_blk=b_blk, k_blk=k_blk, interpret=_on_cpu()
+    )  # (B_pad, c, dsub)
+    out = out[:B].reshape(B, c * dsub)
+    return out, (idx, k, jnp.zeros((0,), tables.dtype))
+
+
+def _cce_lookup_bwd(b_blk, k_blk, res, g):
+    idx, k, dtype_token = res
+    tdtype = dtype_token.dtype
+    c, B, T = idx.shape
+    dsub = g.shape[-1] // c
+    B_pad = _round_up(B, b_blk)
+    k_pad = _round_up(k, k_blk)
+    idx_p = jnp.pad(idx, ((0, 0), (0, B_pad - B), (0, 0)))
+    g_p = jnp.pad(
+        g.reshape(B, c, dsub).astype(tdtype), ((0, B_pad - B), (0, 0), (0, 0))
+    )
+    # padded batch rows all point at row 0 — mask their contribution by
+    # zeroing the padded gradient rows (jnp.pad already zero-fills).
+    dtab = _cl.cce_lookup_bwd_pallas(
+        idx_p, g_p, k_pad, b_blk=b_blk, k_blk=k_blk, interpret=_on_cpu()
+    )[:, :, :k, :]
+    zero_idx = np.zeros(idx.shape, jax.dtypes.float0)
+    return (zero_idx, dtab)
+
+
+_cce_lookup.defvjp(_cce_lookup_fwd, _cce_lookup_bwd)
+
+
+def cce_lookup(
+    idx: jax.Array,
+    tables: jax.Array,
+    *,
+    b_blk: int = _cl.DEFAULT_B_BLK,
+    k_blk: int | None = None,
+) -> jax.Array:
+    """Fused multi-table gather-sum: (c, B, T) idx + (c, T, k, dsub) tables
+    -> (B, c*dsub) embeddings.  Differentiable w.r.t. ``tables``."""
+    k = tables.shape[2]
+    if k_blk is None:
+        k_blk = min(_cl.DEFAULT_K_BLK, _round_up(k, 128))
+    b_blk = min(b_blk, _round_up(idx.shape[1], 8))
+    return _cce_lookup(idx, tables, b_blk, k_blk)
+
+
+# --- flash attention ----------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    bq: int | None = None, bk: int | None = None):
+    """Pallas flash attention (see kernels/flash_attention.py).  q (B,Sq,H,D),
+    k/v (B,S,KVH,D) -> (B,Sq,H,D).  Pads Sq/S to block multiples."""
+    from repro.kernels import flash_attention as _fa
+
+    B, Sq, H, D = q.shape
+    S = k.shape[1]
+    bq = bq or min(_fa.DEFAULT_BQ, _round_up(Sq, 128))
+    bk = bk or min(_fa.DEFAULT_BK, _round_up(S, 128))
+    Sq_p, S_p = _round_up(Sq, bq), _round_up(S, bk)
+    q_p = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    # padded kv rows must never win the softmax: causal masking already
+    # excludes them for q < Sq when S_p == Sq_p (the causal contract here)
+    out = _fa.flash_attention_pallas(
+        q_p, k_p, v_p, causal=causal, bq=bq, bk=bk, interpret=_on_cpu()
+    )
+    return out[:, :Sq]
+
+
+# --- kmeans_assign ------------------------------------------------------------
+
+_PAD_CENTROID = 1e15  # ||pad||^2 ~ 1e30 * d — never the argmin, no inf-inf NaNs
+
+
+def kmeans_assign(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    n_blk: int = _ka.DEFAULT_N_BLK,
+    k_blk: int | None = None,
+) -> jax.Array:
+    """(n, d) points, (k, d) centroids -> (n,) int32 nearest-centroid ids."""
+    n, d = x.shape
+    k = centroids.shape[0]
+    if k_blk is None:
+        k_blk = min(_ka.DEFAULT_K_BLK, _round_up(k, 128))
+    n_blk = min(n_blk, _round_up(n, 8))
+    n_pad = _round_up(n, n_blk)
+    k_pad = _round_up(k, k_blk)
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    c_p = jnp.pad(
+        centroids, ((0, k_pad - k), (0, 0)), constant_values=_PAD_CENTROID
+    )
+    arg, _ = _ka.kmeans_assign_pallas(
+        x_p, c_p, n_blk=n_blk, k_blk=k_blk, interpret=_on_cpu()
+    )
+    return arg[:n]

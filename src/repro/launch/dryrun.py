@@ -1,0 +1,166 @@
+import os
+
+# MUST run before any other import (jax locks device count on first init).
+# DRYRUN_DEVICES exists for memory-constrained debugging only; the
+# deliverable meshes need the full 512.
+_N_DEV = os.environ.get("DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_N_DEV} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms from the compiled
+artifact.  No allocation, no execution — ShapeDtypeStruct in, HLO out.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2x16x16
+Results append to benchmarks/results/dryrun.json (one record per cell,
+re-runs overwrite the cell).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import hlo_cost, roofline, shapes as shp, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results")
+
+
+def n_params_of(state_shape) -> int:
+    import numpy as np
+
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(state_shape.params)))
+
+
+def active_params(cfg, total: int) -> int:
+    if cfg.family != "moe":
+        return total
+    expert = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+    return total - expert + expert * cfg.top_k // cfg.n_experts
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides: dict | None = None) -> dict:
+    cfg = configs.get(arch, **(overrides or {}))
+    shape = shp.SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok", "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    if not shp.applicable(cfg, shape_name):
+        rec["status"] = "n/a (full attention at 500k — DESIGN.md §long_500k)"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            jitted, (state_shape, batch_sds), _ = steps.build_train_step(
+                cfg, mesh, shape_name
+            )
+            lowered = jitted.lower(state_shape, batch_sds)
+            n_total = n_params_of(state_shape)
+        else:
+            jitted, args = steps.build_serve_step(cfg, mesh, shape_name)
+            lowered = jitted.lower(*args)
+            import numpy as np
+
+            n_total = int(sum(np.prod(l.shape) for l in jax.tree.leaves(args[0])))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = hlo_cost.analyze(compiled.as_text())
+        n_act = active_params(cfg, n_total)
+        mf = roofline.model_flops_n(n_act, shape)
+        terms = roofline.roofline_terms(hlo, n_chips=n_chips, model_flops=mf)
+
+    rec.update(
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        n_params=n_total,
+        n_active_params=n_act,
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        collectives={"counts": hlo.coll, "ici_bytes": hlo.ici_bytes,
+                     "dcn_bytes": hlo.dcn_bytes},
+        xla_cost_analysis={"flops": float(cost.get("flops", 0)),
+                           "bytes": float(cost.get("bytes accessed", 0))},
+        roofline=terms,
+    )
+    return rec
+
+
+def save(rec: dict, path: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+    if rec.get("overrides"):
+        key += "|" + ",".join(f"{k}={v}" for k, v in sorted(rec["overrides"].items()))
+    data[key] = rec
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(
+        os.path.join(RESULTS, "dryrun.json")))
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides k=v (ints auto-cast)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else list(configs.ARCHS)
+    shape_names = [args.shape] if args.shape else list(shp.SHAPES)
+    for arch in archs:
+        for sn in shape_names:
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, sn, multi_pod=args.multi_pod,
+                               overrides=overrides)
+            except Exception as e:
+                rec = {"arch": arch, "shape": sn,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "status": f"FAIL: {type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:],
+                       "overrides": {k: str(v) for k, v in overrides.items()}}
+            save(rec, args.out)
+            dom = rec.get("roofline", {}).get("dominant", "-")
+            frac = rec.get("roofline", {}).get("roofline_fraction", 0)
+            print(f"[{time.time()-t0:7.1f}s] {arch:22s} {sn:12s} "
+                  f"{rec['status'][:60]:60s} dom={dom} frac={frac:.3f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch, shape).
+
+Shapes (from the assignment):
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, zero allocation (the dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN.md §long_500k)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def microbatch(cfg: ModelConfig, shape: Shape, n_dp: int) -> tuple[int, int]:
+    """(accum, micro) for a train shape given the data-parallel degree."""
+    micro = max(cfg.train_microbatch, n_dp)  # at least 1 seq per dp shard
+    micro = min(micro, shape.global_batch)
+    accum = shape.global_batch // micro
+    return accum, micro
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: Shape, n_dp: int):
+    """Batch pytree of ShapeDtypeStructs, leaves (accum, micro, ...)."""
+    accum, micro = microbatch(cfg, shape, n_dp)
+    S = shape.seq
+    if cfg.n_codebooks:
+        batch = {"tokens": sds((accum, micro, S, cfg.n_codebooks), jnp.int32)}
+    elif cfg.family == "vlm":
+        # n_patches image positions + text fill the seq budget
+        s_text = S - cfg.n_patches
+        batch = {
+            "tokens": sds((accum, micro, s_text), jnp.int32),
+            "patch_emb": sds((accum, micro, cfg.n_patches, cfg.d_model), cfg.dtype),
+        }
+    else:
+        batch = {"tokens": sds((accum, micro, S), jnp.int32)}
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: Shape):
+    B, S = shape.global_batch, shape.seq
+    if cfg.n_codebooks:
+        toks = sds((B, S, cfg.n_codebooks), jnp.int32)
+    else:
+        toks = sds((B, S), jnp.int32)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    return {"tokens": toks, "cache": cache}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape):
+    B, S = shape.global_batch, shape.seq
+    if cfg.n_codebooks:
+        toks = sds((B, cfg.n_codebooks), jnp.int32)
+    else:
+        toks = sds((B,), jnp.int32)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    return {"tokens": toks, "pos": sds((B,), jnp.int32), "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, n_dp: int = 16):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, n_dp)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

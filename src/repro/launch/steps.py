@@ -1,0 +1,178 @@
+"""Builds the jitted step functions with full sharding for a mesh —
+shared by the dry-run, the benchmarks, and the real launchers.
+
+Everything here is mesh-parametric: pass the 16x16 production mesh, the
+2x16x16 multi-pod mesh, or a 1x1 CPU mesh and the same code lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import shapes as shp
+from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw, cosine_schedule
+from repro.optim.optimizers import moment_specs
+from repro.train.loop import TrainState, make_train_step, split_buffers
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_state(cfg: ModelConfig, optimizer):
+    """eval_shape the full TrainState — zero allocation."""
+    def mk():
+        params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
+        dyn, _ = split_buffers(buffers)
+        return TrainState(
+            params=params, opt=optimizer.init(params), ebuf=dyn,
+            step=jnp.zeros((), jnp.int32), err=None,
+        )
+
+    return jax.eval_shape(mk)
+
+
+def static_buffers_for(cfg: ModelConfig):
+    """The static (hash-coefficient) halves of the buffers — pure numpy,
+    never allocates tables or touches the mesh."""
+    buffers = lm.init_buffers(cfg)
+    _, static = split_buffers(buffers)
+    return static
+
+
+def state_specs(cfg: ModelConfig, state_shape, *, dp="data", tp="model", dp_size=16):
+    pspecs = lm.param_specs(cfg, dp=dp, tp=tp)
+    ospecs = moment_specs("adamw", pspecs, state_shape.params, dp_axis=dp, dp_size=dp_size)
+    ebuf_specs = jax.tree.map(lambda _: P(), state_shape.ebuf)
+    return TrainState(
+        params=pspecs, opt=ospecs, ebuf=ebuf_specs, step=P(), err=None,
+    )
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape_name: str = "train_4k"):
+    """Returns (jitted_step, (state_sds, batch_sds)) ready to .lower()."""
+    baxes = mesh_batch_axes(mesh)
+    if cfg.parallelism == "fsdp":
+        baxes = baxes + ("model",)  # batch over every axis; weights FSDP
+    n_dp = 1
+    for a in baxes:
+        n_dp *= mesh.shape[a]
+    shape = shp.SHAPES[shape_name]
+    accum, micro = shp.microbatch(cfg, shape, n_dp)
+    optimizer = adamw(weight_decay=0.1)
+    lr_fn = cosine_schedule(3e-4, 100, 10_000)
+
+    state_shape = abstract_state(cfg, optimizer)
+    sspecs = state_specs(cfg, state_shape, dp="data", tp="model", dp_size=mesh.shape.get("data", 1))
+    static_buf = static_buffers_for(cfg)
+
+    def loss_fn(params, buffers, mb):
+        return lm.next_token_loss(params, buffers, cfg, mb, batch_axes=baxes)
+
+    grad_specs = None
+    if cfg.zero2_grads:
+        from repro.optim.optimizers import zero1_specs
+
+        grad_specs = zero1_specs(
+            lm.param_specs(cfg, dp="data", tp="model"), state_shape.params,
+            dp_axis="data", dp_size=mesh.shape.get("data", 1),
+        )
+    step_fn = make_train_step(
+        loss_fn, optimizer, lr_fn, static_buf, accum=accum, clip_norm=1.0,
+        grad_specs=grad_specs,
+    )
+
+    batch_sds = shp.train_input_specs(cfg, shape, n_dp)
+    bspec = jax.tree.map(lambda _: P(None, baxes), batch_sds)
+
+    state_shardings = _ns(mesh, sspecs)
+    batch_shardings = _ns(mesh, bspec)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_shape, batch_sds), (state_shardings, batch_shardings)
+
+
+def _maybe_dp(n: int, baxes, n_dp: int):
+    """Batch-dim spec: shard over dp axes only when divisible."""
+    return baxes if n % n_dp == 0 else None
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape_name: str):
+    """decode or prefill step, jitted with cache donation."""
+    baxes = mesh_batch_axes(mesh)
+    n_dp = 1
+    for a in baxes:
+        n_dp *= mesh.shape[a]
+    shape = shp.SHAPES[shape_name]
+    static_buf = static_buffers_for(cfg)
+    pspecs = lm.param_specs(cfg, dp="data", tp="model")
+    bdim = _maybe_dp(shape.global_batch, baxes, n_dp)
+    cspecs = lm.cache_specs(cfg, batch_axes=bdim, tp="model")
+
+    def mk():
+        params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
+        dyn, _ = split_buffers(buffers)  # split INSIDE the trace: ints stay static
+        return params, dyn
+
+    params_shape, dyn_shape = jax.eval_shape(mk)
+    ebuf_specs = jax.tree.map(lambda _: P(), dyn_shape)
+
+    from repro.train.loop import merge_buffers
+
+    if shape.kind == "decode":
+        def step(params, ebuf, tokens, pos, cache):
+            buffers = merge_buffers(ebuf, static_buf)
+            return lm.decode_step(params, buffers, cfg, tokens, pos, cache,
+                                  batch_axes=bdim or ())
+
+        specs = shp.decode_input_specs(cfg, shape)
+        tok_spec = P(bdim) if specs["tokens"].ndim == 1 else P(bdim, None)
+        in_shardings = (
+            _ns(mesh, pspecs), _ns(mesh, ebuf_specs),
+            _ns(mesh, tok_spec), _ns(mesh, P(bdim)), _ns(mesh, cspecs),
+        )
+        out_shardings = (None, _ns(mesh, cspecs))
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings, donate_argnums=(4,))
+        args = (params_shape, dyn_shape, specs["tokens"], specs["pos"], specs["cache"])
+        return jitted, args
+
+    def step(params, ebuf, tokens, cache):
+        buffers = merge_buffers(ebuf, static_buf)
+        return lm.prefill(params, buffers, cfg, tokens, cache,
+                          batch_axes=bdim or ())
+
+    specs = shp.prefill_input_specs(cfg, shape)
+    tok_spec = P(bdim, None) if specs["tokens"].ndim == 2 else P(bdim, None, None)
+    in_shardings = (
+        _ns(mesh, pspecs), _ns(mesh, ebuf_specs),
+        _ns(mesh, tok_spec), _ns(mesh, cspecs),
+    )
+    out_shardings = (None, _ns(mesh, cspecs))
+    jitted = jax.jit(step, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(3,))
+    args = (params_shape, dyn_shape, specs["tokens"], specs["cache"])
+    return jitted, args
+
+
+def build_step(cfg: ModelConfig, mesh, shape_name: str):
+    shape = shp.SHAPES[shape_name]
+    if shape.kind == "train":
+        jitted, (state_shape, batch_sds), _ = build_train_step(cfg, mesh, shape_name)
+        return jitted, (state_shape, batch_sds)
+    return build_serve_step(cfg, mesh, shape_name)

@@ -1,0 +1,139 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+        --steps 50 --emb cce --ckpt-dir /tmp/ckpt
+
+``--reduced`` runs the CPU-sized family variant (what the smoke tests use);
+without it the full config lowers for whatever devices exist (on a real pod
+this is the entry point — same code path the dry-run proves out).
+DLRM (the paper's model): ``--arch dlrm``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import clickstream_batches, lm_token_batches, ClickstreamConfig
+from repro.launch.mesh import make_host_mesh, batch_axes as mesh_batch_axes
+from repro.models import dlrm, lm
+from repro.optim import adamw, sgd, cosine_schedule
+from repro.train.loop import (
+    FailureInjector,
+    StragglerMonitor,
+    Trainer,
+    init_state,
+    make_train_step,
+    split_buffers,
+)
+
+
+def build_lm_trainer(cfg, args):
+    key = jax.random.PRNGKey(args.seed)
+    params, buffers = lm.init(key, cfg)
+    dyn, static = split_buffers(buffers)
+    optimizer = adamw(weight_decay=0.1)
+    lr_fn = cosine_schedule(args.lr, args.warmup, args.steps)
+
+    def loss_fn(p, b, mb):
+        return lm.next_token_loss(p, b, cfg, mb, batch_axes=None)
+
+    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum)
+    state = init_state(params, optimizer, dyn)
+    data = lm_token_batches(
+        cfg.vocab, args.batch, args.seq, seed=args.seed,
+        n_codebooks=cfg.n_codebooks,
+    )
+
+    cluster_fn = None
+    if cfg.emb_method == "cce":
+        emb = lm.make_emb(cfg)
+
+        def cluster_fn(key, params, buffers):
+            ep, eb = emb.cluster(key, params["emb"], buffers["emb"])
+            return dict(params, emb=ep), dict(buffers, emb=eb)
+
+    return Trainer(
+        jax.jit(step, donate_argnums=(0,)), state, static, data,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        cluster_fn=cluster_fn, cluster_every=args.cluster_every,
+        accum=args.accum,
+        failures=FailureInjector(tuple(args.fail_at)),
+        monitor=StragglerMonitor(),
+        seed=args.seed,
+    )
+
+
+def build_dlrm_trainer(args):
+    from repro.configs import dlrm_criteo
+
+    cfg = dlrm_criteo.reduced(emb_method=args.emb, cap=args.emb_cap)
+    key = jax.random.PRNGKey(args.seed)
+    params, buffers = dlrm.init(key, cfg)
+    dyn, static = split_buffers(buffers)
+    optimizer = sgd(momentum=0.0)  # the paper's choice
+    lr_fn = lambda step: jnp.float32(args.lr)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum)
+    state = init_state(params, optimizer, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=args.seed), args.batch
+    )
+
+    def cluster_fn(key, params, buffers):
+        return dlrm.cluster_tables(key, params, buffers, cfg)
+
+    return Trainer(
+        jax.jit(step, donate_argnums=(0,)), state, static, data,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        cluster_fn=cluster_fn if args.emb == "cce" else None,
+        cluster_every=args.cluster_every, accum=args.accum,
+        failures=FailureInjector(tuple(args.fail_at)),
+        seed=args.seed,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dlrm")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--emb", default="cce")
+    ap.add_argument("--emb-cap", type=int, default=512)
+    ap.add_argument("--cluster-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.arch == "dlrm":
+        trainer = build_dlrm_trainer(args)
+    else:
+        cfg = configs.get_reduced(args.arch, emb_method=args.emb)
+        trainer = build_lm_trainer(cfg, args)
+
+    t0 = time.time()
+    hist = trainer.run(args.steps)
+    dt = time.time() - t0
+    losses = [h["loss"] for h in hist]
+    print(f"{args.arch}: {len(hist)} steps in {dt:.1f}s  "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}  "
+          f"stragglers={len(trainer.monitor.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

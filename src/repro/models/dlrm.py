@@ -1,0 +1,133 @@
+"""DLRM (Naumov et al. 2019) — the paper's backbone recommendation model.
+
+13 dense features -> bottom MLP; 26 categorical features -> one embedding
+table each (every table independently compressible by any method in the
+unified sketch framework, incl. CCE); pairwise dot-product interaction;
+top MLP -> 1 logit; Binary Cross-Entropy loss.  Matches the open-source
+DLRM benchmark configuration the paper trains on Criteo.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embeddings as emb_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    vocab_sizes: tuple[int, ...]  # one per categorical feature (26 on Criteo)
+    n_dense: int = 13
+    emb_dim: int = 16
+    bottom_mlp: tuple[int, ...] = (512, 256, 64, 16)
+    top_mlp: tuple[int, ...] = (512, 256, 1)
+    # per-table compression: method + cap on the LARGEST table's params
+    emb_method: str = "full"
+    emb_param_cap: int = 0  # 0 = uncapped
+    emb_c: int = 4
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    def table(self, i: int):
+        v = self.vocab_sizes[i]
+        cap = self.emb_param_cap
+        if self.emb_method == "full" or not cap or v * self.emb_dim <= cap:
+            # small tables stay uncompressed (paper §Repro: full table for
+            # small features, compressed for the big ones)
+            return emb_lib.make_table("full", v, self.emb_dim, dtype=self.dtype)
+        return emb_lib.make_table(
+            self.emb_method, v, self.emb_dim, budget=cap, c=self.emb_c,
+            dtype=self.dtype, seed_salt=i,
+        )
+
+    def n_emb_params(self) -> int:
+        return sum(self.table(i).n_params for i in range(self.n_sparse))
+
+    def compression(self) -> float:
+        full = sum(v * self.emb_dim for v in self.vocab_sizes)
+        return full / max(1, self.n_emb_params())
+
+
+def _init_mlp(key, sizes: Sequence[int], dtype):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({
+            "w": (jax.random.normal(k, (a, b)) / math.sqrt(a)).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        })
+    return params
+
+
+def _apply_mlp(params, x, final_act: bool = False):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init(key, cfg: DLRMConfig):
+    kb, kt, ke = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "bottom": _init_mlp(kb, (cfg.n_dense, *cfg.bottom_mlp), cfg.dtype),
+    }
+    buffers: dict[str, Any] = {}
+    emb_params = []
+    emb_buffers = []
+    for i in range(cfg.n_sparse):
+        p, b = cfg.table(i).init(jax.random.fold_in(ke, i))
+        emb_params.append(p)
+        emb_buffers.append(b)
+    params["emb"] = emb_params
+    buffers["emb"] = emb_buffers
+    n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    top_in = cfg.bottom_mlp[-1] + n_pairs
+    params["top"] = _init_mlp(kt, (top_in, *cfg.top_mlp), cfg.dtype)
+    return params, buffers
+
+
+def forward(params, buffers, cfg: DLRMConfig, batch):
+    """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits."""
+    dense = batch["dense"].astype(cfg.dtype)
+    sparse = batch["sparse"]
+    x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
+    vecs = [x0]
+    for i in range(cfg.n_sparse):
+        t = cfg.table(i)
+        vecs.append(t.lookup(params["emb"][i], buffers["emb"][i], sparse[:, i]))
+    V = jnp.stack(vecs, axis=1)  # (B, 27, emb_dim)
+    # pairwise dot interactions (upper triangle, no self)
+    inter = jnp.einsum("bie,bje->bij", V, V)
+    iu, ju = jnp.triu_indices(V.shape[1], k=1)
+    feats = jnp.concatenate([x0, inter[:, iu, ju]], axis=-1)
+    return _apply_mlp(params["top"], feats)[:, 0]
+
+
+def bce_loss(params, buffers, cfg: DLRMConfig, batch):
+    logits = forward(params, buffers, cfg, batch)
+    y = batch["label"].astype(jnp.float32)
+    lg = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+def cluster_tables(key, params, buffers, cfg: DLRMConfig):
+    """Run the CCE clustering transition on every CCE table (the training
+    callback — Alg. 3 `Cluster`)."""
+    from repro.core.cce import CCE
+
+    new_p, new_b = list(params["emb"]), list(buffers["emb"])
+    for i in range(cfg.n_sparse):
+        t = cfg.table(i)
+        if isinstance(t, CCE):
+            new_p[i], new_b[i] = t.cluster(
+                jax.random.fold_in(key, i), params["emb"][i], buffers["emb"][i]
+            )
+    return dict(params, emb=new_p), dict(buffers, emb=new_b)

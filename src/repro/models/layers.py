@@ -1,0 +1,325 @@
+"""Common transformer layers — pure functions over param pytrees.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions return params.
+  * activations are (B, S, d) in ``cfg.dtype``; params kept in
+    ``cfg.param_dtype`` and cast at use (mixed precision).
+  * every function takes/returns explicit state — no globals, no classes
+    with mutable state, so everything works under jit/scan/shard_map.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, with_bias: bool | None = None):
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if with_bias if with_bias is not None else cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_dim(x, scale, eps: float = 1e-6):
+    """RMS-norm over the last dim with a given scale vector (qk_norm etc.)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- positions ---------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    half = cfg.head_dim // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x (..., S, H, D) with positions (..., S) -> rotated x."""
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- attention ---------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig):
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": truncated_normal(kq, (d, cfg.q_dim), s, cfg.param_dtype),
+        "wk": truncated_normal(kk, (d, cfg.kv_dim), s, cfg.param_dtype),
+        "wv": truncated_normal(kv, (d, cfg.kv_dim), s, cfg.param_dtype),
+        "wo": truncated_normal(ko, (cfg.q_dim, d), s / math.sqrt(2 * cfg.n_layers), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    """x (B, S, d) -> q (B,S,H,D), k/v (B,S,KVH,D)."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm_dim(q, p["q_norm"])
+        k = rms_norm_dim(k, p["k_norm"])
+    return q, k, v
+
+
+def _shard(x, spec):
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask, axes=None) -> jax.Array:
+    """Grouped-query scaled dot-product attention.
+
+    q (B, Sq, H, D); k/v (B, Sk, KVH, D); mask broadcastable (B, 1, Sq, Sk)
+    or (Sq, Sk).  Returns (B, Sq, H, D).
+
+    ``axes`` = (dp_axes, tp_axis) mesh hints: the query-head dim is sharded
+    over TP (GSPMD pads when H % tp != 0) so score tensors — the largest
+    transients at long sequence — stay distributed.  KV is expanded to H
+    heads per-use (fused, bandwidth stays KVH-sized from the cache).
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    if G > 1:  # expand GQA kv heads to the full head count
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if axes is not None:
+        dp, tp = axes
+        q = _shard(q, (dp, None, tp, None))
+        k = _shard(k, (dp, None, tp, None))
+        v = _shard(v, (dp, None, tp, None))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(D)
+    if cfg.logit_softcap:
+        cap = cfg.logit_softcap
+        scores = jnp.tanh(scores / cap) * cap
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    if axes is not None:
+        scores = _shard(scores, (axes[0], axes[1], None, None))
+    if cfg.attn_impl == "dense_bf16p":
+        # §Perf: keep row statistics in f32 but store the exp'd
+        # probabilities in bf16 — the S^2 tensors after the max-subtraction
+        # carry values in [0, 1] where bf16 is plenty; halves the dominant
+        # HBM-traffic term of non-flash attention.
+        m = jax.lax.stop_gradient(scores.max(axis=-1, keepdims=True))
+        p = jnp.exp(scores - m).astype(jnp.bfloat16)
+        l = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        w = (p / l.astype(jnp.bfloat16)).astype(q.dtype)
+    else:
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out
+
+
+def causal_mask(Sq: int, Sk: int, sliding_window: int = 0, offset: int = 0):
+    """(Sq, Sk) boolean mask. ``offset`` = absolute position of query 0
+    relative to key 0 (for chunked prefill)."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Sk)[None, :]
+    m = qi >= kj
+    if sliding_window:
+        m = m & (qi - kj < sliding_window)
+    return m
+
+
+def _sdpa_chunked(cfg: ModelConfig, q, k, v, axes=None) -> jax.Array:
+    """Flash-style causal attention: lax.scan over KV chunks with an online
+    softmax (running max m, denominator l, output accumulator) — the S x S
+    score matrix NEVER exists in HBM; peak transient is (B, H, Sq, chunk).
+
+    At seq 4096 this removes the dominant HBM-traffic term of the dense
+    path (~10 TB/step/device on qwen3-14b — see EXPERIMENTS.md §Perf).
+    Backward differentiates through the scan: per-chunk recompute, same
+    O(S·chunk) working set.
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if axes is not None:
+        dp, tp = axes
+        q = _shard(q, (dp, None, tp, None))
+        k = _shard(k, (dp, None, tp, None))
+        v = _shard(v, (dp, None, tp, None))
+    C = min(cfg.attn_chunk, Sq)
+    assert Sq % C == 0, (Sq, C)
+    nc = Sq // C
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,S,D)
+    kc = jnp.moveaxis(k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, H, nc, C, D), 2, 0)
+    vc = jnp.moveaxis(v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, H, nc, C, D), 2, 0)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        acc, m, l = carry  # (B,H,S,D), (B,H,S), (B,H,S)
+        j, kj, vj = inp  # chunk idx, (B,H,C,D), (B,H,C,D)
+        kpos = j * C + jnp.arange(C)
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kj)  # (B,H,S,C)
+        valid = qpos[:, None] >= kpos[None, :]
+        if cfg.sliding_window:
+            valid &= qpos[:, None] - kpos[None, :] < cfg.sliding_window
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))  # stays -inf if all masked
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        pexp = jnp.where(valid[None, None], jnp.exp(s - safe_m[..., None]), 0.0)
+        l = l * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqc,bhcd->bhqd", pexp, vj)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    # remat the chunk body: the backward otherwise SAVES the per-chunk
+    # exp-weights — which re-materializes the full S^2 traffic the chunked
+    # form exists to avoid
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,S,H,D)
+
+
+def attention_train(p, cfg: ModelConfig, x, positions, freqs, axes=None) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    S = x.shape[1]
+    if cfg.attn_impl == "chunked" and S > cfg.attn_chunk:
+        out = _sdpa_chunked(cfg, q, k, v, axes=axes)
+    else:
+        mask = causal_mask(S, S, cfg.sliding_window)
+        out = _sdpa(cfg, q, k, v, mask, axes=axes)
+    return out.reshape(*x.shape[:2], cfg.q_dim) @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p, cfg: ModelConfig, x, pos, cache_k, cache_v, freqs, axes=None):
+    """One-token decode with a KV cache.
+
+    x (B, 1, d); pos (B,) int32 current positions; cache_k/v
+    (B, S_max, KVH, D).  Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)  # q (B,1,H,D), k/v (B,1,KVH,D)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    S_max = cache_k.shape[1]  # = min(max_seq, window) for sliding-window
+    ring = bool(cfg.sliding_window)
+    slot = pos % S_max if ring else pos
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    kj = jnp.arange(S_max)[None, :]  # (1, S_max) cache slots
+    if ring:
+        # once the ring is full (pos >= S_max) every slot is live,
+        # before that only slots up to the write point.
+        valid = (kj <= slot[:, None]) | (pos[:, None] >= S_max)
+    else:
+        valid = kj <= pos[:, None]
+    mask = valid[:, None, None, :]  # (B,1,1,S_max) over (B,h,q,k)
+    out = _sdpa(cfg, q, cache_k, cache_v, mask, axes=axes)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+# --- MLP ---------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wi": truncated_normal(k1, (d, f), s, cfg.param_dtype),
+            "wg": truncated_normal(k2, (d, f), s, cfg.param_dtype),
+            "wo": truncated_normal(k3, (f, d), so, cfg.param_dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": truncated_normal(k1, (d, f), s, cfg.param_dtype),
+        "bi": jnp.zeros((f,), cfg.param_dtype),
+        "wo": truncated_normal(k2, (f, d), so, cfg.param_dtype),
+        "bo": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+        return h @ p["wo"].astype(dt)
+    h = jax.nn.gelu(x @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    return h @ p["wo"].astype(dt) + p["bo"].astype(dt)

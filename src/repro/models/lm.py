@@ -1,0 +1,722 @@
+"""Unified decoder LM covering every assigned architecture family.
+
+One ``init``/``forward``/``decode_step`` triple handles:
+  dense   — qwen3-14b/4b, qwen2-1.5b, command-r-35b (parallel_block)
+  moe     — qwen3-moe-235b-a22b, phi3.5-moe-42b
+  hybrid  — hymba (parallel GQA-attention + mamba heads per layer)
+  xlstm   — xlstm-1.3b (mLSTM/sLSTM superblocks, no attention at all)
+  vlm     — paligemma backbone (precomputed patch embeddings prepended)
+  audio   — musicgen backbone (4 EnCodec codebooks summed at input,
+            4 output heads)
+
+The input embedding and the output head are the paper's integration
+points: ``cfg.emb_method`` selects any table from the unified sketching
+framework (full/hash/hemb/ce/robe/dhe/tt/**cce**), and for linear sketches
+the output head uses the factored form (k-sized matmuls + integer gathers
+instead of a vocab × d matmul) — see core/embeddings.py.
+
+Layer stacks are scanned (stacked params) for O(1) HLO size; remat policy
+is configurable per config.  Sharding is pure GSPMD: `param_specs` returns
+a PartitionSpec pytree, `forward` places sharding constraints on the
+residual stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import embeddings as emb_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.config import ModelConfig
+
+
+# --- embedding table construction -------------------------------------------
+
+
+def make_emb(cfg: ModelConfig):
+    vocab = cfg.vocab * cfg.n_codebooks if cfg.n_codebooks else cfg.vocab
+    return emb_lib.make_table(
+        cfg.emb_method,
+        vocab,
+        cfg.d_model,
+        budget=cfg.emb_budget or None,
+        c=cfg.emb_c,
+        dtype=cfg.param_dtype,
+    )
+
+
+# --- per-layer init ----------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg)}
+    if cfg.family == "xlstm":
+        raise AssertionError("xlstm uses _init_xlstm_stack")
+    p["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+        # per-branch output norms (hymba averages normed branch outputs)
+        p["attn_norm"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+        p["ssm_norm"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = L.init_norm(cfg)
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    """Returns (params, buffers).  buffers = non-trainable (hash coeffs,
+    CCE pointer arrays) — kept separate so the optimizer never sees them."""
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    emb = make_emb(cfg)
+    emb_params, emb_buffers = emb.init(k_emb)
+    params: dict[str, Any] = {"emb": emb_params}
+    buffers: dict[str, Any] = {"emb": emb_buffers}
+
+    if cfg.family == "xlstm":
+        params["blocks"] = _init_xlstm_stack(k_layers, cfg)
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_layer(k, cfg))(keys)
+
+    params["ln_f"] = L.init_norm(cfg)
+    n_heads_out = cfg.n_codebooks if cfg.n_codebooks else 1
+    if cfg.tie_embeddings:
+        pass  # head reuses emb params
+    elif cfg.emb_method in ("full",):
+        params["head"] = L.truncated_normal(
+            k_head,
+            (n_heads_out * cfg.vocab, cfg.d_model),
+            1.0 / math.sqrt(cfg.d_model),
+            cfg.param_dtype,
+        )
+    else:
+        # compressed factored head: a second table instance (own seed)
+        head = dataclasses.replace(make_emb(cfg), seed_salt=1)
+        hp, hb = head.init(k_head)
+        params["head"] = hp
+        buffers["head"] = hb
+    if cfg.family == "vlm":
+        # stub adapter for precomputed SigLIP patch embeddings
+        params["patch_proj"] = L.truncated_normal(
+            k_extra, (cfg.d_model, cfg.d_model), 1.0 / math.sqrt(cfg.d_model), cfg.param_dtype
+        )
+    return params, buffers
+
+
+def init_buffers(cfg: ModelConfig):
+    """Only the embedding buffers (hash coeffs + pointer arrays) — pure
+    numpy, no device allocation, no mesh interaction.  Identical values to
+    init()'s buffer output (both derive from seed_salt)."""
+    emb = make_emb(cfg)
+    buffers: dict[str, Any] = {"emb": emb.init_buffers()}
+    if not cfg.tie_embeddings and cfg.emb_method != "full":
+        head = dataclasses.replace(make_emb(cfg), seed_salt=1)
+        buffers["head"] = head.init_buffers()
+    return buffers
+
+
+def _init_xlstm_stack(key, cfg: ModelConfig):
+    d = cfg.d_model
+
+    def stacked_norm(*lead):
+        return {"scale": jnp.ones((*lead, d), cfg.param_dtype)}
+
+    if cfg.slstm_every:
+        n_super = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        km, ks = jax.random.split(key)
+        mkeys = jax.random.split(km, n_super * n_m).reshape(n_super, n_m, -1)
+        ml = jax.vmap(jax.vmap(lambda k: xlstm_lib.init_mlstm(k, cfg)))(mkeys)
+        skeys = jax.random.split(ks, n_super)
+        sl = jax.vmap(lambda k: xlstm_lib.init_slstm(k, cfg))(skeys)
+        norms = {"m": stacked_norm(n_super, n_m), "s": stacked_norm(n_super)}
+        return {"mlstm": ml, "slstm": sl, "norms": norms}
+    keys = jax.random.split(key, cfg.n_layers)
+    ml = jax.vmap(lambda k: xlstm_lib.init_mlstm(k, cfg))(keys)
+    return {"mlstm": ml, "norms": stacked_norm(cfg.n_layers)}
+
+
+# --- sharding specs -----------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, *, dp: Any = "data", tp: str = "model", ep: str | None = "data"):
+    """PartitionSpec pytree matching init()'s params.
+
+    Strategy (TP = megatron, EP = experts over the data axis, FSDP-style
+    extra sharding of big replicated tensors over data where free):
+      * embeddings / head: d_model column sharded over TP (gathers partition
+        trivially on the non-gathered dim — no vocab-dim collectives).
+      * attention: head dim over TP;  MLP: ff dim over TP.
+      * MoE experts: expert dim over EP, ff dim over TP.
+      * norms / small vectors: replicated.
+    """
+    def attn_spec():
+        s = {
+            "wq": P(None, tp), "wk": P(None, tp), "wv": P(None, tp),
+            "wo": P(tp, None),
+        }
+        if cfg.qkv_bias:
+            s |= {"bq": P(tp), "bk": P(tp), "bv": P(tp)}
+        if cfg.qk_norm:
+            s |= {"q_norm": P(None), "k_norm": P(None)}
+        return s
+
+    def norm_spec():
+        return {"scale": P(None)} | ({"bias": P(None)} if cfg.norm == "layernorm" else {})
+
+    def mlp_spec():
+        if cfg.act == "swiglu":
+            return {"wi": P(None, tp), "wg": P(None, tp), "wo": P(tp, None)}
+        return {"wi": P(None, tp), "bi": P(tp), "wo": P(tp, None), "bo": P(None)}
+
+    def emb_spec():
+        m = cfg.emb_method
+        if m == "full":
+            return {"table": P(None, tp)}
+        if m == "cce":
+            return {"tables": P(None, None, None, tp)}  # (c,2,k,dsub): dsub/TP
+        if m in ("hash", "hemb"):
+            return {"M": P(None, tp)}
+        if m == "ce":
+            return {"tables": P(None, None, tp)}
+        if m == "robe":
+            return {"flat": P(None)}
+        if m == "dhe":
+            return {"w1": P(None, tp), "b1": P(tp), "w2": P(tp, None), "b2": P(None),
+                    "w3": P(None, tp), "b3": P(tp)}
+        if m == "tt":
+            return {"g1": P(None, None, None), "g2": P(None, None, tp, None), "g3": P(None, None, None)}
+        raise ValueError(m)
+
+    specs: dict[str, Any] = {"emb": emb_spec(), "ln_f": norm_spec()}
+
+    if cfg.family == "xlstm":
+        # heads are few (4) — shard the wide di / head_dim axes over TP
+        m = {
+            "up": P(None, tp), "wq": P(None, tp), "wk": P(None, tp),
+            "wv": P(None, tp), "wi": P(tp, None), "wf": P(tp, None),
+            "bf": P(None), "bi": P(None), "ln_scale": P(tp), "down": P(tp, None),
+        }
+        s = {
+            "wx": P(None, tp), "wr": P(None, None, None), "b": P(tp),
+            "ln_scale": P(None), "up": P(None, tp), "down": P(tp, None),
+        }
+        add1 = lambda spec: jax.tree.map(lambda ps: P(None, *ps), spec,
+                                         is_leaf=lambda x: isinstance(x, P))
+        add2 = lambda spec: jax.tree.map(lambda ps: P(None, None, *ps), spec,
+                                         is_leaf=lambda x: isinstance(x, P))
+        if cfg.slstm_every:
+            specs["blocks"] = {
+                "mlstm": add2(m), "slstm": add1(s),
+                "norms": {"m": add2(norm_spec()), "s": add1(norm_spec())},
+            }
+        else:
+            specs["blocks"] = {"mlstm": add1(m), "norms": add1(norm_spec())}
+    else:
+        layer: dict[str, Any] = {"ln1": norm_spec(), "attn": attn_spec()}
+        if not cfg.parallel_block:
+            layer["ln2"] = norm_spec()
+        if cfg.family == "hybrid":
+            layer["ssm"] = {
+                "in_proj": P(None, tp), "conv": P(None, tp), "x_proj": P(tp, None),
+                "dt_bias": P(tp), "A_log": P(tp, None), "D": P(tp),
+                "out_proj": P(tp, None),
+            }
+            layer["attn_norm"] = P(None)
+            layer["ssm_norm"] = P(None)
+        if cfg.family == "moe":
+            layer["moe"] = {
+                "router": P(None, None),
+                "wi": P(ep, None, tp), "wg": P(ep, None, tp), "wo": P(ep, tp, None),
+            }
+        elif cfg.d_ff:
+            layer["mlp"] = mlp_spec()
+        # prepend the stacked-layer axis
+        specs["blocks"] = jax.tree.map(
+            lambda ps: P(None, *ps), layer, is_leaf=lambda x: isinstance(x, P)
+        )
+
+    if cfg.tie_embeddings:
+        pass
+    elif cfg.emb_method == "full":
+        specs["head"] = P(tp, None)
+    else:
+        specs["head"] = emb_spec()
+    if cfg.family == "vlm":
+        specs["patch_proj"] = P(None, tp)
+    return specs
+
+
+# --- embedding lookup / logits -----------------------------------------------
+
+
+def embed(params, buffers, cfg: ModelConfig, tokens):
+    """tokens (B, S) or (B, S, n_codebooks) -> (B, S, d)."""
+    emb = make_emb(cfg)
+    if cfg.n_codebooks:
+        # offset each codebook into its own vocab range, sum embeddings
+        offs = jnp.arange(cfg.n_codebooks, dtype=tokens.dtype) * cfg.vocab
+        x = emb.lookup(params["emb"], buffers["emb"], tokens + offs).sum(axis=-2)
+    else:
+        x = emb.lookup(params["emb"], buffers["emb"], tokens)
+    if cfg.emb_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x.astype(cfg.dtype)
+
+
+def logits_fn(params, buffers, cfg: ModelConfig, h):
+    """h (..., d) -> (..., vocab) or (..., n_codebooks, vocab)."""
+    n_out = cfg.n_codebooks if cfg.n_codebooks else 1
+    if cfg.tie_embeddings or cfg.emb_method != "full":
+        tab = make_emb(cfg)
+        key = "emb" if cfg.tie_embeddings else "head"
+        out = tab.logits(params[key], buffers[key], h.astype(cfg.dtype))
+    else:
+        out = h.astype(cfg.dtype) @ params["head"].astype(cfg.dtype).T
+    if cfg.n_codebooks:
+        out = out.reshape(*h.shape[:-1], n_out, cfg.vocab)
+    return out
+
+
+# --- forward (training / prefill) ---------------------------------------------
+
+
+def _block_train(p, cfg: ModelConfig, x, positions, freqs, *, decode_cache=None, axes=None):
+    """One non-xlstm block over a full sequence.  Returns (x, aux, cache)."""
+    aux = jnp.float32(0)
+    h = L.apply_norm(p["ln1"], x)
+    new_cache = None
+    if decode_cache is None:
+        attn = L.attention_train(p["attn"], cfg, h, positions, freqs, axes=axes)
+    else:
+        attn, ck, cv = L.attention_decode(
+            p["attn"], cfg, h, positions, decode_cache["k"], decode_cache["v"],
+            freqs, axes=axes,
+        )
+        new_cache = dict(decode_cache, k=ck, v=cv)
+    if cfg.family == "hybrid":
+        if decode_cache is None:
+            s = ssm_lib.ssm_train(p["ssm"], cfg, h)
+        else:
+            s, hst, cst = ssm_lib.ssm_decode(
+                p["ssm"], cfg, h, decode_cache["ssm"], decode_cache["conv"]
+            )
+            new_cache = dict(new_cache, ssm=hst, conv=cst)
+        # hymba: mean of per-branch RMS-normed outputs
+        attn = L.rms_norm_dim(attn, p["attn_norm"])
+        s = L.rms_norm_dim(s, p["ssm_norm"])
+        x = x + 0.5 * (attn + s)
+    elif cfg.parallel_block:
+        # command-r: attn and FFN both read ln1(x), summed into the residual
+        x = x + attn + L.apply_mlp(p["mlp"], cfg, h)
+        return x, aux, new_cache
+    else:
+        x = x + attn
+    if cfg.family == "moe":
+        h2 = L.apply_norm(p["ln2"], x)
+        if decode_cache is None:
+            moe_fn = {"sort": moe_lib.apply_moe_sort,
+                      "sort_sm": moe_lib.apply_moe_sort_sm,
+                      "einsum": moe_lib.apply_moe}[cfg.moe_impl]
+            mo, aux = moe_fn(p["moe"], cfg, h2, group_size=cfg.moe_group)
+        else:
+            mo = moe_lib.apply_moe_decode(p["moe"], cfg, h2)
+        x = x + mo
+    elif cfg.d_ff and not cfg.parallel_block:
+        x = x + L.apply_mlp(p["mlp"], cfg, L.apply_norm(p["ln2"], x))
+    return x, aux, new_cache
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _constrain(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # outside a mesh context (CPU smoke tests)
+
+
+def forward(params, buffers, cfg: ModelConfig, batch, *, batch_axes=("data",)):
+    """Full-sequence forward.  batch: dict with "tokens" (B,S[,cb]) int32 and
+    optional "patch_emb" (B, n_patches, d) for vlm.  Returns (logits, aux).
+    """
+    tokens = batch["tokens"]
+    x = embed(params, buffers, cfg, tokens)
+    dp = P(batch_axes)
+    B, S = x.shape[0], x.shape[1]
+    if cfg.family == "vlm" and "patch_emb" in batch:
+        pe = batch["patch_emb"].astype(cfg.dtype) @ params["patch_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    x = _constrain(x, P(batch_axes, None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_pos_emb(positions, cfg.d_model).astype(x.dtype)
+    freqs = L.rope_freqs(cfg)
+
+    aux_total = jnp.float32(0)
+    if cfg.family == "xlstm":
+        x, _ = _xlstm_forward(params["blocks"], cfg, x)
+    else:
+        policy = _remat_policy(cfg)
+
+        # under fsdp the 'model' axis belongs to the batch — attention runs
+        # fully local, no head sharding
+        fsdp = batch_axes and "model" in batch_axes
+        axes = None if fsdp else (batch_axes, "model")
+        # sequence-parallel residual (§Perf): the stream between blocks is
+        # sharded over (dp, TP-on-seq); XLA then reduce-scatters the block
+        # outputs and all-gathers before the next projection — same math,
+        # half the bytes of the baseline's full all-reduces, and norms run
+        # 1/|TP| as wide.
+        res_spec = P(batch_axes, "model" if cfg.seq_shard and not fsdp else None, None)
+
+        def body(carry, lp):
+            x = carry
+            x = _constrain(x, res_spec)
+            x, aux, _ = _block_train(lp, cfg, x, positions, freqs, axes=axes)
+            return x, aux
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, policy=policy)
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(body, x, params["blocks"])
+            aux_total = auxs.sum()
+        else:
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, aux = body(x, lp)
+                aux_total = aux_total + aux
+
+    x = L.apply_norm(params["ln_f"], x)
+    if cfg.family == "vlm" and "patch_emb" in batch:
+        x = x[:, -tokens.shape[1]:]  # only text positions produce logits
+    logits = logits_fn(params, buffers, cfg, x)
+    vocab_axis = None if (batch_axes and "model" in batch_axes) else "model"
+    logits = _constrain(
+        logits,
+        P(batch_axes, None, *([None] * (logits.ndim - 3)), vocab_axis),
+    )
+    return logits, aux_total
+
+
+def _xlstm_forward(blocks, cfg: ModelConfig, x, *, collect_state: bool = False):
+    """Returns (x, cache_pytree | None).  ``collect_state`` gathers the
+    terminal recurrent state per block (prefill); training skips it to avoid
+    materializing the (L,B,H,hd,hd) matrix memories."""
+    policy = _remat_policy(cfg)
+
+    def m_body(x, lp):
+        h = L.apply_norm(lp["norm"], x)
+        y, state = xlstm_lib.mlstm_train(lp["p"], cfg, h)
+        out = state if collect_state else None
+        return x + y, out
+
+    if cfg.remat != "none" and not collect_state:
+        m_body = jax.checkpoint(m_body, policy=policy)
+
+    if cfg.slstm_every:
+        def super_body(x, sp):
+            x, mstates = jax.lax.scan(
+                m_body, x, {"p": sp["mlstm"], "norm": sp["norms_m"]}
+            )
+            h = L.apply_norm(sp["norms_s"], x)
+            y, sstate = xlstm_lib.slstm_seq(sp["slstm"], cfg, h)
+            out = None
+            if collect_state:
+                C, n, m = mstates
+                out = {"C": C, "n": n, "m": m, "s_c": sstate[0],
+                       "s_n": sstate[1], "s_h": sstate[2], "s_m": sstate[3]}
+            return x + y, out
+
+        if cfg.remat != "none" and not collect_state:
+            super_body = jax.checkpoint(super_body, policy=policy)
+        stacked = {
+            "mlstm": blocks["mlstm"], "slstm": blocks["slstm"],
+            "norms_m": blocks["norms"]["m"], "norms_s": blocks["norms"]["s"],
+        }
+        x, cache = jax.lax.scan(super_body, x, stacked)
+        return x, cache
+    x, states = jax.lax.scan(m_body, x, {"p": blocks["mlstm"], "norm": blocks["norms"]})
+    cache = None
+    if collect_state:
+        C, n, m = states
+        cache = {"C": C, "n": n, "m": m}
+    return x, cache
+
+
+# --- loss ----------------------------------------------------------------------
+
+
+def next_token_loss(params, buffers, cfg: ModelConfig, batch, *, batch_axes=("data",)):
+    """Causal LM loss with next-token targets; aux-loss weighted in for MoE."""
+    logits, aux = forward(params, buffers, cfg, batch, batch_axes=batch_axes)
+    tokens = batch["tokens"]
+    lg = logits[:, :-1]  # (B,S-1,V) or (B,S-1,cb,V)
+    tg = tokens[:, 1:]  # (B,S-1) or (B,S-1,cb)
+    lg = lg.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    # one-hot contraction partitions cleanly over a vocab-sharded last dim
+    picked = jnp.sum(jax.nn.one_hot(tg, cfg.vocab, dtype=lg.dtype) * lg, axis=-1)
+    ce = (logz - picked).mean()
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# --- decode --------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode cache pytree with a stacked (L, ...) leading dim for scan."""
+    if cfg.family == "xlstm":
+        return _init_xlstm_cache(cfg, batch)
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    Lc = cfg.n_layers
+    cache = {
+        "k": jnp.zeros((Lc, batch, S, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros((Lc, batch, S, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+    if cfg.family == "hybrid":
+        cache["ssm"] = jnp.zeros((Lc, batch, cfg.ssm_inner, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, cfg.ssm_inner), jnp.float32)
+    return cache
+
+
+def _init_xlstm_cache(cfg: ModelConfig, batch: int):
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    if cfg.slstm_every:
+        n_super = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        return {
+            "C": jnp.zeros((n_super, n_m, batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((n_super, n_m, batch, H, hd), jnp.float32),
+            "m": jnp.full((n_super, n_m, batch, H), -jnp.inf, jnp.float32),
+            "s_c": jnp.zeros((n_super, batch, cfg.d_model), jnp.float32),
+            "s_n": jnp.zeros((n_super, batch, cfg.d_model), jnp.float32),
+            "s_h": jnp.zeros((n_super, batch, cfg.d_model), jnp.float32),
+            "s_m": jnp.full((n_super, batch, cfg.d_model), -jnp.inf, jnp.float32),
+        }
+    Lc = cfg.n_layers
+    return {
+        "C": jnp.zeros((Lc, batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((Lc, batch, H, hd), jnp.float32),
+        "m": jnp.full((Lc, batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def cache_batch_axis(cfg: ModelConfig):
+    """Pytree (matching init_cache) of the batch-dimension index per leaf —
+    the serving engine scatters per-slot prefill results along it."""
+    if cfg.family == "xlstm" and cfg.slstm_every:
+        return {"C": 2, "n": 2, "m": 2, "s_c": 1, "s_n": 1, "s_h": 1, "s_m": 1}
+    if cfg.family == "xlstm":
+        return {"C": 1, "n": 1, "m": 1}
+    base = {"k": 1, "v": 1}
+    if cfg.family == "hybrid":
+        base |= {"ssm": 1, "conv": 1}
+    return base
+
+
+def cache_specs(cfg: ModelConfig, *, batch_axes=("data",), tp="model"):
+    dp = batch_axes
+    if cfg.family == "xlstm":
+        # few heads (4) — shard the (large) head_dim axis of the matrix
+        # memory over TP, not the head axis
+        if cfg.slstm_every:
+            return {
+                "C": P(None, None, dp, None, tp, None),
+                "n": P(None, None, dp, None, tp),
+                "m": P(None, None, dp, None),
+                "s_c": P(None, dp, tp), "s_n": P(None, dp, tp),
+                "s_h": P(None, dp, tp), "s_m": P(None, dp, tp),
+            }
+        return {
+            "C": P(None, dp, None, tp, None),
+            "n": P(None, dp, None, tp),
+            "m": P(None, dp, None),
+        }
+    # KV-head counts (1..24) rarely divide the TP axis — shard head_dim
+    # (always 64/128, divisible) instead
+    spec = {
+        "k": P(None, dp, None, None, tp),
+        "v": P(None, dp, None, None, tp),
+    }
+    if cfg.family == "hybrid":
+        spec["ssm"] = P(None, dp, tp, None)
+        spec["conv"] = P(None, dp, None, tp)
+    return spec
+
+
+def decode_step(params, buffers, cfg: ModelConfig, tokens, pos, cache, *, batch_axes=("data",)):
+    """One-token decode.  tokens (B,) or (B, cb); pos (B,) int32.
+    Returns (logits (B, vocab[, cb]), new cache)."""
+    x = embed(params, buffers, cfg, tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :])
+    x = _constrain(x, P(batch_axes, None, None))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_pos_emb(pos[:, None], cfg.d_model).astype(x.dtype)
+    freqs = L.rope_freqs(cfg)
+
+    if cfg.family == "xlstm":
+        x, cache = _xlstm_decode(params["blocks"], cfg, x, cache)
+    else:
+        axes = (batch_axes, "model")
+
+        def body(x, inp):
+            lp, lc = inp
+            x, _, nc = _block_train(lp, cfg, x, pos, freqs, decode_cache=lc, axes=axes)
+            return x, nc
+
+        x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    x = L.apply_norm(params["ln_f"], x)
+    logits = logits_fn(params, buffers, cfg, x[:, 0])
+    return logits, cache
+
+
+def _xlstm_decode(blocks, cfg: ModelConfig, x, cache):
+    def m_body(x, inp):
+        lp, (C, n, m) = inp
+        h = L.apply_norm(lp["norm"], x)
+        y, (C, n, m) = xlstm_lib.mlstm_decode(lp["p"], cfg, h, (C, n, m))
+        return x + y, (C, n, m)
+
+    if cfg.slstm_every:
+        def super_body(x, inp):
+            sp, sc = inp
+            x, (C, n, m) = jax.lax.scan(
+                m_body, x,
+                ({"p": sp["mlstm"], "norm": sp["norms_m"]}, (sc["C"], sc["n"], sc["m"])),
+            )
+            h = L.apply_norm(sp["norms_s"], x)
+            st = (sc["s_c"], sc["s_n"], sc["s_h"], sc["s_m"])
+            y, st = xlstm_lib.slstm_seq(sp["slstm"], cfg, h, st)
+            nc = {"C": C, "n": n, "m": m, "s_c": st[0], "s_n": st[1], "s_h": st[2], "s_m": st[3]}
+            return x + y, nc
+
+        stacked = {
+            "mlstm": blocks["mlstm"], "slstm": blocks["slstm"],
+            "norms_m": blocks["norms"]["m"], "norms_s": blocks["norms"]["s"],
+        }
+        x, cache = jax.lax.scan(super_body, x, (stacked, cache))
+        return x, cache
+    x, (C, n, m) = jax.lax.scan(
+        m_body, x,
+        ({"p": blocks["mlstm"], "norm": blocks["norms"]}, (cache["C"], cache["n"], cache["m"])),
+    )
+    return x, {"C": C, "n": n, "m": m}
+
+
+def prefill(params, buffers, cfg: ModelConfig, tokens, cache, *, batch_axes=("data",)):
+    """Process a full prompt, fill the cache, return logits of last position.
+
+    For attention families this recomputes k/v per layer and writes them into
+    the cache (the standard prefill); for xlstm it runs the chunked forms and
+    stores the terminal recurrent state.
+    """
+    B, S = tokens.shape[0], tokens.shape[1]
+    if cfg.family == "xlstm":
+        # chunked-parallel forms with terminal-state collection: O(S·chunk)
+        # prefill, after which decode continues from the recurrent states.
+        x = embed(params, buffers, cfg, tokens)
+        x = _constrain(x, P(batch_axes, None, None))
+        x, cache = _xlstm_forward(params["blocks"], cfg, x, collect_state=True)
+        x = L.apply_norm(params["ln_f"], x[:, -1:])
+        return logits_fn(params, buffers, cfg, x[:, 0]), cache
+    freqs = L.rope_freqs(cfg)
+    x = embed(params, buffers, cfg, tokens)
+    x = _constrain(x, P(batch_axes, None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_pos_emb(positions, cfg.d_model).astype(x.dtype)
+
+    def body(x, inp):
+        lp, lc = inp
+        h = L.apply_norm(lp["ln1"], x)
+        q, k, v = L._project_qkv(lp["attn"], cfg, h)
+        if cfg.pos_emb == "rope":
+            q = L.apply_rope(q, positions, freqs)
+            k = L.apply_rope(k, positions, freqs)
+        Sc = lc["k"].shape[1]
+        if cfg.sliding_window and Sc < S:
+            # keep only the last window of k/v in the ring buffer
+            ks_, vs_ = k[:, -Sc:], v[:, -Sc:]
+            start = (S - Sc) % Sc
+            idx = (jnp.arange(Sc) + start) % Sc
+            nk = lc["k"].at[:, idx].set(ks_)
+            nv = lc["v"].at[:, idx].set(vs_)
+        else:
+            nk = lc["k"].at[:, :S].set(k)
+            nv = lc["v"].at[:, :S].set(v)
+        mask = L.causal_mask(S, S, cfg.sliding_window)
+        attn = L._sdpa(cfg, q, k, v, mask, axes=(batch_axes, "model"))
+        attn = attn.reshape(B, S, cfg.q_dim) @ lp["attn"]["wo"].astype(x.dtype)
+        nc = dict(lc, k=nk, v=nv)
+        if cfg.family == "hybrid":
+            s = ssm_lib.ssm_train(lp["ssm"], cfg, h)
+            # also capture terminal ssm state for subsequent decode
+            st, cv = _ssm_terminal_state(lp["ssm"], cfg, h)
+            nc["ssm"], nc["conv"] = st, cv
+            attn = L.rms_norm_dim(attn, lp["attn_norm"])
+            s = L.rms_norm_dim(s, lp["ssm_norm"])
+            x = x + 0.5 * (attn + s)
+        elif cfg.parallel_block:
+            x = x + attn + L.apply_mlp(lp["mlp"], cfg, h)
+            return x, nc
+        else:
+            x = x + attn
+        if cfg.family == "moe":
+            h2 = L.apply_norm(lp["ln2"], x)
+            moe_fn = (moe_lib.apply_moe_sort if cfg.moe_impl == "sort"
+                      else moe_lib.apply_moe)
+            mo, _ = moe_fn(lp["moe"], cfg, h2, group_size=cfg.moe_group)
+            x = x + mo
+        elif cfg.d_ff and not cfg.parallel_block:
+            x = x + L.apply_mlp(lp["mlp"], cfg, L.apply_norm(lp["ln2"], x))
+        return x, nc
+
+    x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.apply_norm(params["ln_f"], x[:, -1:])
+    return logits_fn(params, buffers, cfg, x[:, 0]), cache
+
+
+def _ssm_terminal_state(p, cfg: ModelConfig, x_in):
+    """Terminal (ssm_state, conv_state) after consuming x_in — for prefill."""
+    xz = x_in @ p["in_proj"].astype(x_in.dtype)
+    dt, B_t, C_t, z, xc, conv_state = ssm_lib._selective_terms(p, cfg, xz)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    B_, S, di = xc.shape
+
+    def step(h, inp):
+        dt_t, B_tt, x_t = inp
+        a = jnp.exp(dt_t[..., None] * A)
+        bx = (dt_t * x_t)[..., None] * B_tt[..., None, :]
+        return a * h + bx, None
+
+    inputs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B_t.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+    )
+    h, _ = jax.lax.scan(step, jnp.zeros((B_, di, cfg.ssm_state), jnp.float32), inputs)
+    return h, conv_state

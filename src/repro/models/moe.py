@@ -1,0 +1,280 @@
+"""GShard-style top-k Mixture-of-Experts FFN.
+
+Dispatch/combine are expressed as einsums over a (groups, group_size, E, C)
+one-hot capacity tensor — the SPMD-friendly formulation (no sorts/scatters,
+so the XLA partitioner shards it cleanly: groups over the data axis, experts
+over the EP axis, expert hidden dim over the model axis; the regrouping
+between token- and expert-sharded layouts lowers to all-to-alls).
+
+Tokens are routed within fixed-size groups (``group_size`` tokens) so the
+capacity tensor is O(group_size · E · C) per group regardless of global
+batch — the knob that keeps the dispatch tensor inside HBM at pod scale.
+
+Returns the load-balancing aux loss (Shazeer/GShard: E · Σ_e f_e · p_e).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal, _shard
+
+DEFAULT_GROUP = 2048
+EP_AXIS = "data"  # expert-parallel axis of the production mesh
+
+
+def _to_experts(t):
+    """(G, E, C, d) group-sharded -> expert-sharded: forces the all-to-all
+    that moves token slots to where the expert weights live, instead of
+    letting the partitioner all-gather the (much larger) expert weights."""
+    return _shard(t, (None, EP_AXIS, None, None))
+
+
+def _to_groups(t):
+    return _shard(t, (EP_AXIS, None, None, None))
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    return {
+        "router": truncated_normal(kr, (d, E), s, cfg.param_dtype),
+        "wi": truncated_normal(k1, (E, d, f), s, cfg.param_dtype),
+        "wg": truncated_normal(k2, (E, d, f), s, cfg.param_dtype),
+        "wo": truncated_normal(k3, (E, f, d), so, cfg.param_dtype),
+    }
+
+
+def apply_moe(p, cfg: ModelConfig, x, *, group_size: int = DEFAULT_GROUP):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = max(k, int(math.ceil(g * k / E * cfg.capacity_factor)))
+    xg = x.reshape(G, g, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment: choice-major priority (all 1st choices first)
+    combine = jnp.zeros((G, g, E, C), jnp.float32)
+    counts = jnp.zeros((G, E), jnp.float32)
+    for j in range(k):
+        mask = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.float32)  # (G,g,E)
+        pos = jnp.cumsum(mask, axis=1) - mask + counts[:, None, :]  # (G,g,E)
+        counts = counts + mask.sum(axis=1)
+        keep = mask * (pos < C)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        combine = combine + gate_vals[..., j, None, None] * keep[..., None] * pos_oh
+
+    dispatch = (combine > 0).astype(x.dtype)  # (G,g,E,C)
+    # token -> expert slots; then all-to-all to the expert shards
+    expert_in = _to_experts(jnp.einsum("gtec,gtd->gecd", dispatch, xg))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(x.dtype))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), _to_groups(expert_out))
+
+    # GShard load-balance loss: E * sum_e (fraction routed to e) * (mean prob e)
+    frac = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe_sort(p, cfg: ModelConfig, x, *, group_size: int = DEFAULT_GROUP):
+    """Sort-based (MegaBlocks-style) routing — §Perf replacement for the
+    GShard einsum dispatch.
+
+    The einsum formulation multiplies every token by a (E x C)-slot one-hot
+    — at 128 experts that dispatch matmul costs ~10x the expert FFN compute
+    itself and materializes (g, E, C) tensors.  Here tokens are instead
+    argsorted by expert id WITHIN each (shard-local) group, scattered into
+    their (E, C, d) slots, and combined back with a segment-sum — integer
+    routing, zero matmul overhead, same capacity/drop semantics (choice-
+    rank priority rather than token-order priority on overflow).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = max(k, int(math.ceil(g * k / E * cfg.capacity_factor)))
+    xg = x.reshape(G, g, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    def route_one(xi, gv, gi):
+        # xi (g,d); gv/gi (g,k) — flatten CHOICE-MAJOR so the stable sort
+        # gives overflow priority to 1st choices (matches apply_moe)
+        flat_e = gi.T.reshape(g * k)
+        flat_gate = gv.T.reshape(g * k)
+        token_of = jnp.tile(jnp.arange(g), k)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(g * k) - starts[e_sorted]
+        keep = pos < C
+        slot = jnp.where(keep, e_sorted * C + pos, E * C)  # E*C = drop bin
+        tok_sorted = token_of[order]
+        buf = jnp.zeros((E * C + 1, d), xi.dtype).at[slot].add(xi[tok_sorted])
+        expert_in = buf[: E * C].reshape(E, C, d)
+        return expert_in, (slot, keep, flat_gate[order], tok_sorted)
+
+    expert_in, (slot, keep, gate_sorted, tok_sorted) = jax.vmap(route_one)(
+        xg, gate_vals, gate_idx
+    )
+    # (G,E,C,d): groups live on the EP shards; move slots to the experts
+    expert_in = _to_experts(expert_in)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(x.dtype))
+    expert_out = _to_groups(jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype)))
+
+    def combine_one(eo, slot, keep, gate, tok):
+        flat_out = eo.reshape(E * C, d)
+        picked = jnp.where(
+            keep[:, None], flat_out[jnp.clip(slot, 0, E * C - 1)], 0.0
+        ) * gate[:, None].astype(eo.dtype)
+        return jax.ops.segment_sum(picked, tok, num_segments=g)
+
+    out = jax.vmap(combine_one)(expert_out, slot, keep, gate_sorted, tok_sorted)
+
+    frac = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe_sort_sm(p, cfg: ModelConfig, x, *, group_size: int = DEFAULT_GROUP,
+                      axes=("data", "model")):
+    """Sort routing + shard_map expert FFN with MANUAL collective placement
+    (§Perf).  The GSPMD version psums the (G,E,C,d) slot tensor over TP —
+    slots are ~top_k·cf times the token count, so that all-reduce dominates
+    the MoE step.  Since combine is linear, the partial (f-shard) expert
+    outputs can be combined into TOKEN space first and psummed there:
+
+        a2a(slots->experts) . local FFN . a2a(experts->slots)
+          . local combine . psum_tp(tokens)
+
+    cutting the dominant collective by ~top_k·cf·(bytes f32/bf16) ~= 10-20x.
+    Falls back to `apply_moe_sort` when no mesh is active (CPU tests).
+    """
+    ep, tp = axes
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or ep not in (mesh.axis_names or ()):
+            return apply_moe_sort(p, cfg, x, group_size=group_size)
+        n_ep = mesh.shape[ep]
+    except Exception:
+        return apply_moe_sort(p, cfg, x, group_size=group_size)
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    G = T // g
+    if G % n_ep or E % n_ep:
+        return apply_moe_sort(p, cfg, x, group_size=group_size)
+    C = max(k, int(math.ceil(g * k / E * cfg.capacity_factor)))
+    xg = x.reshape(G, g, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    def route_one(xi, gv, gi):
+        flat_e = gi.T.reshape(g * k)
+        flat_gate = gv.T.reshape(g * k)
+        token_of = jnp.tile(jnp.arange(g), k)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(g * k) - starts[e_sorted]
+        keep = pos < C
+        slot = jnp.where(keep, e_sorted * C + pos, E * C)
+        tok_sorted = token_of[order]
+        buf = jnp.zeros((E * C + 1, d), xi.dtype).at[slot].add(xi[tok_sorted])
+        return buf[: E * C].reshape(E, C, d), slot, keep, flat_gate[order], tok_sorted
+
+    expert_in, slot, keep, gate_s, tok_s = jax.vmap(route_one)(xg, gate_vals, gate_idx)
+
+    from jax.sharding import PartitionSpec as P
+
+    def ffn_combine(ein, slot, keep, gate, tok, wg, wi, wo):
+        # local shapes: ein (G/n, E, C, d); weights (E/n, d, f/tp)
+        ein = jax.lax.all_to_all(ein, ep, split_axis=1, concat_axis=0,
+                                 tiled=True)  # -> (G, E/n, C, d)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, wg.astype(ein.dtype)))
+        h = h * jnp.einsum("gecd,edf->gecf", ein, wi.astype(ein.dtype))
+        part = jnp.einsum("gecf,efd->gecd", h, wo.astype(ein.dtype))
+        part = jax.lax.all_to_all(part, ep, split_axis=0, concat_axis=1,
+                                  tiled=True)  # -> (G/n, E, C, d) f-partial
+
+        def combine_one(eo, slot, keep, gate, tok):
+            flat = eo.reshape(E * C, d)
+            picked = jnp.where(
+                keep[:, None], flat[jnp.clip(slot, 0, E * C - 1)], 0.0
+            ) * gate[:, None].astype(eo.dtype)
+            return jax.ops.segment_sum(picked, tok, num_segments=g)
+
+        out = jax.vmap(combine_one)(part, slot, keep, gate, tok)  # (G/n, g, d)
+        return jax.lax.psum(out.astype(jnp.float32), tp).astype(out.dtype)
+
+    out = jax.shard_map(
+        ffn_combine,
+        mesh=mesh,
+        in_specs=(P(ep), P(ep), P(ep), P(ep), P(ep), P(ep, None, tp),
+                  P(ep, None, tp), P(ep, tp, None)),
+        out_specs=P(ep),
+    )(expert_in, slot, keep, gate_s.astype(x.dtype), tok_s,
+      p["wg"], p["wi"], p["wo"])
+
+    frac = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe_decode(p, cfg: ModelConfig, x):
+    """Decode path (few tokens): dense masked evaluation.
+
+    x (B, 1, d) -> (B, 1, d).  Every expert runs on every token, masked by
+    the (renormalized) top-k gates.  For single-token decode with a real
+    batch, nearly every expert is hit by some token anyway (B·k >> E), so
+    weight traffic — the decode bottleneck — is identical to gather-based
+    routing, while the dense einsums shard cleanly under SPMD (experts on
+    the EP axis, psum to combine).  No capacity tensor, no token dropping.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B * S, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # dense (T, E) gate matrix, zero outside the top-k
+    gates = jnp.zeros_like(probs)
+    t_idx = jnp.arange(xf.shape[0])[:, None]
+    gates = gates.at[t_idx, gate_idx].set(gate_vals)  # (T,E)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("td,edf->tef", xf, p["wi"].astype(x.dtype))
+    y = jnp.einsum("tef,efd->ted", h, p["wo"].astype(x.dtype))  # (T,E,d)
+    out = jnp.einsum("te,ted->td", gates.astype(x.dtype), y)
+    return out.reshape(B, S, d)

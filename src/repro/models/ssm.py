@@ -1,0 +1,139 @@
+"""Selective SSM (Mamba-style S6) — the SSM branch of hymba's hybrid heads.
+
+Diagonal selective state space:  per channel i and state n,
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = <C_t, h_t> + D * x_t
+with input-dependent dt_t, B_t, C_t (the "selective" part).
+
+TPU adaptation: the recurrence is evaluated CHUNKWISE — an outer
+``lax.scan`` over chunks carries the (B, di, ds) state, an inner
+``associative_scan`` (log-depth) parallelizes within the chunk.  The
+4-D decay/drive tensors (B, chunk, di, ds) only ever exist per chunk, so
+peak memory is O(chunk·di·ds) instead of O(S·di·ds) — at hymba scale
+(di=3200, ds=16, S=4096) that's 52 MB instead of 840 MB per sequence.
+
+Decode carries the state explicitly — O(1) per token, which is what makes
+hymba eligible for long_500k.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+
+DEFAULT_CHUNK = 256
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d, di, ds = cfg.d_model, cfg.ssm_inner, cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    # S4D-real init for A: -(1..ds) per state, shared log-param per channel
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * di), s, cfg.param_dtype),
+        "conv": truncated_normal(ks[1], (cfg.ssm_conv, di), 1.0 / math.sqrt(cfg.ssm_conv), cfg.param_dtype),
+        "x_proj": truncated_normal(ks[2], (di, 2 * ds + 1), 1.0 / math.sqrt(di), cfg.param_dtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.param_dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(cfg.param_dtype),
+        "D": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": truncated_normal(
+            ks[3], (di, d), 1.0 / math.sqrt(di) / math.sqrt(2 * cfg.n_layers), cfg.param_dtype
+        ),
+    }
+
+
+def _selective_terms(p, cfg: ModelConfig, xz, conv_state=None):
+    """Conv + selective projections (the cheap, di/ds-sized tensors).
+
+    xz (B, S, 2*di) from in_proj.  Returns (dt (B,S,di) f32, B_t, C_t
+    (B,S,ds), gate z, conv'd x, new_conv_state).
+    """
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    K = cfg.ssm_conv
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    new_conv_state = xp[:, -(K - 1):] if K > 1 else None
+    # depthwise causal conv via K shifted adds (K is tiny, typically 4)
+    conv = sum(
+        xp[:, i : i + x.shape[1]] * p["conv"].astype(x.dtype)[i]
+        for i in range(K)
+    )
+    x = jax.nn.silu(conv)
+    proj = x @ p["x_proj"].astype(x.dtype)  # (B, S, 2ds+1)
+    B_t = proj[..., :ds]
+    C_t = proj[..., ds : 2 * ds]
+    # dt: shared per-token scalar + per-channel bias (dt_rank=1 variant)
+    dt = jax.nn.softplus(
+        proj[..., 2 * ds :].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, S, di)
+    return dt, B_t, C_t, z, x, new_conv_state
+
+
+def _combine(c1, c2):
+    """Associative op for h_t = a_t h_{t-1} + b_t."""
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def ssm_train(p, cfg: ModelConfig, x_in, *, chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """Full-sequence chunked selective scan.  x_in (B, S, d) -> (B, S, d)."""
+    B, S, _ = x_in.shape
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xz = x_in @ p["in_proj"].astype(x_in.dtype)
+    dt, B_t, C_t, z, x, _ = _selective_terms(p, cfg, xz)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ds)
+    xf = x.astype(jnp.float32)
+
+    def to_chunks(t):  # (B, S, ...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    dt_c, B_c, C_c, x_c = map(to_chunks, (dt, B_t.astype(jnp.float32), C_t.astype(jnp.float32), xf))
+
+    def body(h0, inp):
+        dt_i, B_i, C_i, x_i = inp  # (B, chunk, ...)
+        a = jnp.exp(dt_i[..., None] * A)  # (B, chunk, di, ds)
+        bx = (dt_i * x_i)[..., None] * B_i[..., None, :]
+        A_cum, h_loc = jax.lax.associative_scan(_combine, (a, bx), axis=1)
+        h = h_loc + A_cum * h0[:, None]  # carry contribution
+        y = jnp.einsum("bcdn,bcn->bcd", h, C_i)
+        return h[:, -1], y
+
+    h_last, y = jax.lax.scan(body, jnp.zeros((B, di, ds), jnp.float32), (dt_c, B_c, C_c, x_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, di)
+    y = y + xf * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_in.dtype)
+    return y @ p["out_proj"].astype(x_in.dtype)
+
+
+def ssm_decode(p, cfg: ModelConfig, x_in, ssm_state, conv_state):
+    """One-token step.  x_in (B, 1, d); ssm_state (B, di, ds) f32;
+    conv_state (B, K-1, di).  Returns (y (B,1,d), ssm_state, conv_state)."""
+    xz = x_in @ p["in_proj"].astype(x_in.dtype)
+    dt, B_t, C_t, z, x, new_conv = _selective_terms(p, cfg, xz, conv_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)  # (B, di, ds)
+    bx = (dt[:, 0] * x[:, 0].astype(jnp.float32))[..., None] * B_t[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * ssm_state + bx  # (B, di, ds)
+    y = jnp.einsum("bdn,bn->bd", h, C_t[:, 0].astype(jnp.float32))
+    y = y + x[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x_in.dtype)
+    return y @ p["out_proj"].astype(x_in.dtype), h, new_conv
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    return (
+        jnp.zeros((batch, cfg.ssm_inner, cfg.ssm_state), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_inner), jnp.float32),
+    )

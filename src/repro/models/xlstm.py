@@ -1,0 +1,253 @@
+"""xLSTM blocks (Beck et al. 2024) — mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+xlstm-1.3b stacks 48 blocks with 1 sLSTM per ``slstm_every`` (=8) mLSTM
+blocks, i.e. the xLSTM[7:1] ratio.  d_ff=0: there is no separate FFN — the
+mLSTM block carries its own 2x up-projection, sLSTM a gated FFN.
+
+mLSTM forms implemented:
+  * train/prefill: stabilized chunkwise-quadratic attention-like form —
+    D_ij = exp(sum_{l=j+1..i} logsig(f_l) + log i_j - m_i); h = (Q K^T * D) V
+    evaluated per chunk with a running (C, n, m) inter-chunk state, so cost
+    is O(S * chunk * d) not O(S^2 d).
+  * decode: recurrent (C, n, m) state update — O(1) per token.  This is why
+    xlstm runs long_500k with no KV cache at all.
+
+sLSTM: scalar-memory recurrence with exponential gating, evaluated with a
+``lax.scan`` over time (inherently sequential; kept narrow — head_dim-sized
+ops only).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+
+MLSTM_CHUNK = 256
+
+
+# --- mLSTM -------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d  # fixed 2x up-projection (xLSTM paper)
+    H = cfg.n_heads
+    hd = di // H
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(hd)
+    return {
+        "up": truncated_normal(ks[0], (d, 2 * di), s, cfg.param_dtype),  # x & gate z
+        "wq": truncated_normal(ks[1], (di, di), si, cfg.param_dtype),
+        "wk": truncated_normal(ks[2], (di, di), si, cfg.param_dtype),
+        "wv": truncated_normal(ks[3], (di, di), si, cfg.param_dtype),
+        "wi": truncated_normal(ks[4], (di, H), s, cfg.param_dtype),  # input gate
+        "wf": truncated_normal(ks[5], (di, H), s, cfg.param_dtype),  # forget gate
+        "bf": jnp.full((H,), 3.0, cfg.param_dtype),  # forget-bias init (remember)
+        "bi": jnp.zeros((H,), cfg.param_dtype),
+        "ln_scale": jnp.ones((di,), cfg.param_dtype),
+        "down": truncated_normal(
+            ks[6], (di, d), 1.0 / math.sqrt(di) / math.sqrt(2 * cfg.n_layers), cfg.param_dtype
+        ),
+    }
+
+
+def _mlstm_qkvgates(p, cfg: ModelConfig, x):
+    """x (B, S, d) -> q,k,v (B,S,H,hd), log-gates i,f (B,S,H), gate z (B,S,di)."""
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.n_heads
+    hd = di // H
+    up = x @ p["up"].astype(x.dtype)  # (B,S,2di)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = (xm @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xm @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (xm @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    ig = (xm @ p["wi"].astype(x.dtype)).astype(jnp.float32) + p["bi"].astype(jnp.float32)
+    fg = (xm @ p["wf"].astype(x.dtype)).astype(jnp.float32) + p["bf"].astype(jnp.float32)
+    return q, k, v, ig, fg, z
+
+
+def _headnorm(h, scale, eps=1e-6):
+    """Per-head RMS norm then flatten heads (the xLSTM 'output norm')."""
+    B, S, H, hd = h.shape
+    var = (h * h).mean(-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h.reshape(B, S, H * hd) * scale.astype(h.dtype))
+
+
+def mlstm_train(p, cfg: ModelConfig, x_in, *, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM.  x_in (B,S,d) -> (B,S,d)."""
+    B, S, d = x_in.shape
+    q, k, v, ig, fg, z = _mlstm_qkvgates(p, cfg, x_in)
+    H = q.shape[2]
+    hd = q.shape[3]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    logf = jax.nn.log_sigmoid(fg)  # (B,S,H)
+
+    def to_chunks(t):  # (B,S,...) -> (nc,B,chunk,...)
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, lfc = map(to_chunks, (q, k, v, ig, logf))
+
+    def body(carry, inp):
+        C, n, m = carry  # C (B,H,hd,hd); n (B,H,hd); m (B,H)
+        qi, ki, vi, ii, lfi = inp  # (B, chunk, ...)
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qi, ki, vi))
+        csum = jnp.cumsum(lfi, axis=1)  # (B,chunk,H) inclusive logf cumsum
+        # intra gate matrix: sum_{l=j+1..t} logf_l + log i_j = csum_t - csum_j + i_j
+        dmat = csum[:, :, None, :] - csum[:, None, :, :]  # (B,t,j,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logD = jnp.where(tri[None, :, :, None], dmat + ii[:, None, :, :], -jnp.inf)
+        # per-query stabilizer: max over intra gates and the carried state's m
+        m_intra = jnp.max(logD, axis=2)  # (B,chunk,H)
+        m_inter = m[:, None] + csum  # (B,chunk,H)
+        m_new = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(logD - m_new[:, :, None, :])  # (B,t,j,H)
+        scores = jnp.einsum("bthd,bjhd->btjh", qf, kf)
+        w = scores * D  # w[t,j] = (q_t . k_j) * gate
+        # numerator: intra attention-like term + carried-state readout
+        inter_scale = jnp.exp(m_inter - m_new)  # (B,chunk,H)
+        h_num = jnp.einsum("btjh,bjhd->bthd", w, vf)
+        h_num += jnp.einsum("bthd,bhde->bthe", qf, C) * inter_scale[..., None]
+        # denominator: q . n_total = sum_j w[t,j] + inter part
+        qn = w.sum(axis=2) + jnp.einsum("bthd,bhd->bth", qf, n) * inter_scale
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h_out = h_num / den[..., None]
+        # ---- carry the state to the end of the chunk ----
+        tot = csum[:, -1]  # (B,H) total decay across the chunk
+        decay_to_end = tot[:, None, :] - csum  # sum_{l=j+1..end} logf_l
+        m_next = jnp.maximum(m + tot, jnp.max(ii + decay_to_end, axis=1))
+        scale_old = jnp.exp(m + tot - m_next)  # (B,H)
+        gate = jnp.exp(decay_to_end + ii - m_next[:, None])  # (B,chunk,H)
+        C_new = C * scale_old[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", gate, kf, vf
+        )
+        n_new = n * scale_old[..., None] + jnp.einsum("bjh,bjhd->bhd", gate, kf)
+        return (C_new, n_new, m_next), h_out
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    state, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)  # (B,S,H,hd)
+    out = _headnorm(h.astype(x_in.dtype), p["ln_scale"])
+    out = out * jax.nn.silu(z)
+    return out @ p["down"].astype(x_in.dtype), state
+
+
+def mlstm_decode(p, cfg: ModelConfig, x_in, state):
+    """One-token recurrent mLSTM step.  state = (C (B,H,hd,hd), n, m)."""
+    B = x_in.shape[0]
+    q, k, v, ig, fg, z = _mlstm_qkvgates(p, cfg, x_in)  # S=1
+    C, n, m = state
+    q1, k1, v1 = q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    i1, lf1 = ig[:, 0], jax.nn.log_sigmoid(fg[:, 0])  # (B,H)
+    m_new = jnp.maximum(lf1 + m, i1)
+    C = C * jnp.exp(lf1 + m - m_new)[..., None, None] + jnp.exp(i1 - m_new)[
+        ..., None, None
+    ] * jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n = n * jnp.exp(lf1 + m - m_new)[..., None] + jnp.exp(i1 - m_new)[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]  # (B,1,H,hd)
+    out = _headnorm(h.astype(x_in.dtype), p["ln_scale"])
+    out = out * jax.nn.silu(z)
+    return out @ p["down"].astype(x_in.dtype), (C, n, m_new)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), -jnp.inf, jnp.float32),
+    )
+
+
+# --- sLSTM -------------------------------------------------------------------
+
+
+def slstm_ffn_dim(cfg: ModelConfig) -> int:
+    """~4/3·d gated-FFN width, rounded up to a TP-shardable multiple of 128."""
+    return ((4 * cfg.d_model // 3) + 127) // 128 * 128
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    f = slstm_ffn_dim(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # z/i/f/o pre-activations from input + per-head recurrent weights
+        "wx": truncated_normal(ks[0], (d, 4 * d), s, cfg.param_dtype),
+        "wr": truncated_normal(ks[1], (H, hd, 4 * hd), 1.0 / math.sqrt(hd), cfg.param_dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(cfg.param_dtype),
+        "ln_scale": jnp.ones((d,), cfg.param_dtype),
+        "up": truncated_normal(ks[2], (d, 2 * f), s, cfg.param_dtype),
+        "down": truncated_normal(
+            ks[3], (f, d), 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers), cfg.param_dtype
+        ),
+    }
+
+
+def slstm_seq(p, cfg: ModelConfig, x_in, state=None):
+    """Sequential sLSTM over a whole sequence.  x_in (B,S,d) -> (B,S,d).
+
+    state (optional) = (c, n, h, m) each (B, d) f32 — pass for decode
+    continuation; returned as second output.
+    """
+    B, S, d = x_in.shape
+    H = cfg.n_heads
+    hd = d // H
+    zx = x_in @ p["wx"].astype(x_in.dtype) + p["b"].astype(x_in.dtype)  # (B,S,4d)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    wr = p["wr"].astype(jnp.float32)
+
+    def step(carry, zt):
+        c, n, h, m = carry  # (B, d) f32 each
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, wr).reshape(B, 4 * d)
+        za = zt.astype(jnp.float32) + rec
+        zi, ii, ff, oo = jnp.split(za, 4, axis=-1)
+        zv = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oo)
+        logf = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(logf + m, ii)
+        i_s = jnp.exp(ii - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * zv
+        n = f_s * n + i_s
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    zx_t = jnp.moveaxis(zx, 1, 0)  # (S,B,4d)
+    state, hs = jax.lax.scan(step, state, zx_t)
+    h = jnp.moveaxis(hs, 0, 1).astype(x_in.dtype)  # (B,S,d)
+    # output norm + gated FFN (xLSTM post-up-projection, factor 4/3)
+    var = (h.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(var + 1e-6).astype(h.dtype)) * p["ln_scale"].astype(h.dtype)
+    up = h @ p["up"].astype(h.dtype)
+    a, g = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * g) @ p["down"].astype(h.dtype), state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -jnp.inf, jnp.float32))

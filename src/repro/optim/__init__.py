@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    sgd,
+    clip_by_global_norm,
+    cosine_schedule,
+    zero1_specs,
+)
+from repro.optim.compression import (  # noqa: F401
+    int8_compress,
+    int8_decompress,
+    compressed_grad_transform,
+)

@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous batching.
+
+Slot-based design (the TPU-friendly fixed-shape variant of vLLM-style
+serving): the decode cache is allocated once at (max_batch, max_seq); each
+request owns a slot.  Per tick:
+
+  1. admit queued requests into free slots (prefill writes the slot's cache
+     rows via dynamic_update_slice — one jitted prefill per admitted
+     request, batched decode never stalls),
+  2. one batched decode step for all active slots,
+  3. retire finished requests (eos / max_tokens).
+
+Everything device-side is fixed-shape, so exactly two programs are ever
+compiled (prefill, decode) — no shape churn, which is what keeps a TPU
+serving deployment at high duty cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.loop import merge_buffers, split_buffers
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_tokens: int = 16
+    eos: int | None = None
+    # filled by the engine:
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        buffers,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 256,
+        sample: str = "greedy",
+    ):
+        assert not cfg.n_codebooks, "audio serving uses examples/musicgen_decode"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        dyn, static = split_buffers(buffers)
+        self._dyn, self._static = dyn, static
+        self.cache = lm.init_cache(cfg, max_batch, max_seq)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.last_token = np.zeros((max_batch,), np.int32)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.ticks = 0
+
+        def _decode(dyn, tokens, pos, cache):
+            buffers = merge_buffers(dyn, static)
+            return lm.decode_step(params, buffers, cfg, tokens, pos, cache,
+                                  batch_axes=None)
+
+        def _prefill_one(dyn, tokens, cache1):
+            buffers = merge_buffers(dyn, static)
+            return lm.prefill(params, buffers, cfg, tokens, cache1,
+                              batch_axes=None)
+
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
+        self._prefill = jax.jit(_prefill_one)
+
+    # --- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        finished = []
+        while (self.queue or any(self.slots)) and self.ticks < max_ticks:
+            finished.extend(self.tick())
+        return finished
+
+    # --- engine internals ----------------------------------------------------
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            S = len(req.prompt)
+            assert S < self.max_seq, "prompt longer than max_seq"
+            cache1 = lm.init_cache(self.cfg, 1, self.max_seq)
+            logits, cache1 = self._prefill(
+                self._dyn, jnp.asarray(req.prompt)[None, :], cache1
+            )
+            # scatter the slot's rows into the big cache at each leaf's
+            # batch axis
+            baxis = lm.cache_batch_axis(self.cfg)
+            self.cache = jax.tree.map(
+                lambda big, one, ax: jax.lax.dynamic_update_slice_in_dim(
+                    big, one.astype(big.dtype), slot, axis=ax
+                ),
+                self.cache, cache1, baxis,
+            )
+            self.slots[slot] = req
+            self.pos[slot] = S
+            self.last_token[slot] = int(jnp.argmax(logits[0][: self.cfg.vocab]))
+            req.generated.append(int(self.last_token[slot]))
+
+    def tick(self) -> list[Request]:
+        self._admit()
+        self.ticks += 1
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        logits, self.cache = self._decode(
+            self._dyn,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.pos),
+            self.cache,
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.last_token[i] = nxt[i]
+            if (
+                len(req.generated) >= req.max_tokens
+                or (req.eos is not None and nxt[i] == req.eos)
+                or self.pos[i] >= self.max_seq - 1
+            ):
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return finished

@@ -1,0 +1,8 @@
+from repro.train.loop import (  # noqa: F401
+    TrainState,
+    make_train_step,
+    split_buffers,
+    merge_buffers,
+    StragglerMonitor,
+    Trainer,
+)

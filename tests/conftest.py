@@ -1,0 +1,12 @@
+import os
+
+# smoke tests run on the single real CPU device — the 512-device forcing
+# belongs ONLY to launch/dryrun.py (see the brief); make sure it never leaks
+# into the test environment.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "tests must see 1 device; unset XLA_FLAGS"
+)
+
+import jax
+
+jax.config.update("jax_default_matmul_precision", "highest")

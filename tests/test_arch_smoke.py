@@ -1,0 +1,88 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same
+family runs one forward/train step on CPU — output shapes + no NaNs
+(the full configs are exercised via the dry-run only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+ARCHS = list(configs.ARCHS)
+
+
+def _batch(cfg, key, B=2, S=8):
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    batch = {"tokens": jax.random.randint(key, shape, 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["patch_emb"] = jnp.ones((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params, buffers = lm.init(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = lm.forward(params, buffers, cfg, batch)
+    S_text = batch["tokens"].shape[1]
+    want = (2, S_text, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks else (2, S_text, cfg.vocab)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, _ = lm.next_token_loss(params, buffers, cfg, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: lm.next_token_loss(p, buffers, cfg, batch)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    params, buffers = lm.init(key, cfg)
+    B = 2
+    cache = lm.init_cache(cfg, B, 16)
+    tok = (
+        jax.random.randint(key, (B, cfg.n_codebooks), 0, cfg.vocab)
+        if cfg.n_codebooks
+        else jax.random.randint(key, (B,), 0, cfg.vocab)
+    )
+    logits, cache2 = lm.decode_step(
+        params, buffers, cfg, tok, jnp.zeros((B,), jnp.int32), cache
+    )
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_metadata(arch):
+    """The exact assigned hyperparameters (cheap dataclass checks)."""
+    cfg = configs.get(arch)
+    spec = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == spec
+
+
+def test_moe_extras():
+    q = configs.get("qwen3-moe-235b-a22b")
+    assert (q.n_experts, q.top_k) == (128, 8)
+    p = configs.get("phi3.5-moe-42b-a6.6b")
+    assert (p.n_experts, p.top_k) == (16, 2)
+    h = configs.get("hymba-1.5b")
+    assert h.ssm_state == 16 and h.subquadratic
+    x = configs.get("xlstm-1.3b")
+    assert x.is_recurrent and x.subquadratic

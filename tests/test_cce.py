@@ -1,0 +1,125 @@
+"""Algorithm 3 (CCE) behavioural invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cce import CCE
+
+
+@pytest.fixture(scope="module")
+def cce_and_state():
+    cce = CCE(d1=600, d2=16, k=16, c=4)
+    params, buffers = cce.init(jax.random.PRNGKey(0))
+    return cce, params, buffers
+
+
+def test_lookup_is_sum_of_two_tables(cce_and_state):
+    cce, params, buffers = cce_and_state
+    ids = jnp.arange(20)
+    out = cce.lookup(params, buffers, ids)
+    rows = cce._rows(buffers, ids)
+    for i, cid in enumerate([0, 7, 19]):
+        for col in range(cce.c):
+            main = params["tables"][col, 0, rows[col, cid, 0]]
+            helper = params["tables"][col, 1, rows[col, cid, 1]]
+            np.testing.assert_allclose(
+                np.asarray(out[cid, col * cce.dsub:(col + 1) * cce.dsub]),
+                np.asarray(main + helper), rtol=1e-6,
+            )
+
+
+def test_logits_match_materialized_table(cce_and_state):
+    cce, params, buffers = cce_and_state
+    h = jax.random.normal(jax.random.PRNGKey(1), (5, 16))
+    E = cce.lookup(params, buffers, jnp.arange(cce.d1))
+    np.testing.assert_allclose(
+        np.asarray(cce.logits(params, buffers, h)),
+        np.asarray(h @ E.T), rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_cluster_resets_helper_and_advances_epoch(cce_and_state):
+    cce, params, buffers = cce_and_state
+    p2, b2 = cce.cluster(jax.random.PRNGKey(2), params, buffers)
+    assert b2["epoch"] == buffers["epoch"] + 1
+    # Alg. 3 line 17: helper tables zeroed
+    assert float(jnp.abs(p2["tables"][:, 1]).max()) == 0.0
+    # fresh helper hash functions
+    assert b2["hs"] != buffers["hs"]
+    # pointers in range
+    ptr = np.asarray(b2["ptr"])
+    assert ptr.min() >= 0 and ptr.max() < cce.k
+
+
+def test_cluster_preserves_embeddings_approximately(cce_and_state):
+    """Clustering replaces each embedding by its centroid: the new table
+    should be close to the old one in mean squared error relative to
+    variance (k-means quality), and embeddings of ids in the same cluster
+    become identical per column."""
+    cce, params, buffers = cce_and_state
+    E_old = np.asarray(cce.lookup(params, buffers, jnp.arange(cce.d1)))
+    p2, b2 = cce.cluster(jax.random.PRNGKey(3), params, buffers)
+    E_new = np.asarray(cce.lookup(p2, b2, jnp.arange(cce.d1)))
+    mse = ((E_old - E_new) ** 2).mean()
+    var = E_old.var()
+    assert mse < var  # better than collapsing to the mean
+    # same-cluster ids share the main vector per column (helper is zero)
+    ptr = np.asarray(b2["ptr"])
+    col = 0
+    same = np.where(ptr[col] == ptr[col][0])[0][:5]
+    sub = E_new[same, :cce.dsub]
+    assert np.allclose(sub, sub[0])
+
+
+def test_collapse_entropies_detect_collapse():
+    cce = CCE(d1=500, d2=8, k=8, c=2)
+    params, buffers = cce.init(jax.random.PRNGKey(0))
+    ent = cce.collapse_entropies(buffers)
+    assert ent["H1"] > 0.8 * np.log(cce.k)  # random init: healthy
+    # simulate column collapse
+    bad = dict(buffers, ptr=jnp.zeros_like(buffers["ptr"]))
+    ent_bad = cce.collapse_entropies(bad)
+    assert ent_bad["H1"] == 0.0
+    # simulate pairwise collapse (col 1 = col 0)
+    pair = dict(buffers, ptr=jnp.stack([buffers["ptr"][0], buffers["ptr"][0]]))
+    ent_pair = cce.collapse_entropies(pair)
+    assert ent_pair["H2"] < ent["H2"] - 0.5
+
+
+@given(st.integers(2, 64), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_from_budget_respects_budget(k_budget_mult, c):
+    d1, d2 = 1000, 16
+    budget = k_budget_mult * 2 * d2 * 4
+    cce = CCE.from_budget(d1, d2, budget, c=min(c, 4) if d2 % min(c, 4) == 0 else 1)
+    assert cce.n_params <= budget or cce.k == 1
+
+
+def test_cluster_recovers_planted_structure():
+    """Ids planted in G groups with identical 'true' embeddings: after one
+    training-free cluster step on a table initialized AT the true values,
+    same-group ids should map to the same pointer (per column, mostly)."""
+    G, per, d2 = 8, 25, 8
+    d1 = G * per
+    rng = np.random.default_rng(0)
+    true = rng.normal(size=(G, d2)).astype(np.float32)
+    cce = CCE(d1=d1, d2=d2, k=8, c=2)
+    params, buffers = cce.init(jax.random.PRNGKey(0))
+    # force the current embeddings to the planted ones: main table rows are
+    # the true group vectors, ptr maps id -> its group's row
+    group_of = np.repeat(np.arange(G), per)
+    tables = np.zeros((2, 2, 8, d2 // 2), np.float32)
+    tables[0, 0] = true[:, : d2 // 2]
+    tables[1, 0] = true[:, d2 // 2 :]
+    params = {"tables": jnp.asarray(tables)}
+    buffers = dict(buffers, ptr=jnp.asarray(np.stack([group_of, group_of])))
+    p2, b2 = cce.cluster(jax.random.PRNGKey(1), params, buffers)
+    ptr = np.asarray(b2["ptr"])
+    for col in range(2):
+        # same planted group -> same cluster (pointer purity)
+        for g in range(G):
+            vals = ptr[col][group_of == g]
+            purity = (vals == np.bincount(vals).argmax()).mean()
+            assert purity > 0.99

@@ -1,0 +1,88 @@
+"""The unified sketch framework: every method satisfies the same contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import embeddings as E
+
+D1, D2, BUDGET = 400, 16, 1600
+METHODS = ["hash", "hemb", "ce", "robe", "dhe", "tt", "cce", "full"]
+
+
+def make(method):
+    return E.make_table(method, D1, D2, budget=BUDGET)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_lookup_contract(method):
+    t = make(method)
+    params, buffers = t.init(jax.random.PRNGKey(0))
+    ids = jnp.asarray([0, 1, 5, D1 - 1])
+    out = t.lookup(params, buffers, ids)
+    assert out.shape == (4, D2)
+    assert bool(jnp.isfinite(out).all())
+    # deterministic
+    out2 = t.lookup(params, buffers, ids)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+@pytest.mark.parametrize("method", [m for m in METHODS if m != "full"])
+def test_budget_respected(method):
+    t = make(method)
+    assert t.n_params <= 1.05 * BUDGET, (method, t.n_params)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_logits_equal_materialized(method):
+    t = make(method)
+    params, buffers = t.init(jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (3, D2))
+    ids = jnp.arange(D1)
+    Emat = t.lookup(params, buffers, ids)  # (D1, D2)
+    want = h @ Emat.T
+    got = t.logits(params, buffers, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("method", ["hash", "hemb", "ce"])
+def test_sketch_framework_T_equals_HM(method):
+    """Section 2.1: lookup(i) == (e_i H) M for the linear-sketch methods."""
+    t = make(method)
+    params, buffers = t.init(jax.random.PRNGKey(0))
+    H = t.sketch_matrix(buffers)  # (d1, k')
+    if method in ("hash", "hemb"):
+        M = np.asarray(params["M"])
+    else:  # ce: block-diagonal M
+        c, k, dsub = params["tables"].shape
+        M = np.zeros((c * k, D2), np.float32)
+        for i in range(c):
+            M[i * k:(i + 1) * k, i * dsub:(i + 1) * dsub] = np.asarray(
+                params["tables"][i]
+            )
+    T = H @ M
+    got = np.asarray(t.lookup(params, buffers, jnp.arange(D1)))
+    np.testing.assert_allclose(got, T, rtol=1e-4, atol=1e-5)
+
+
+def test_cce_sketch_matrix_rows():
+    t = make("cce")
+    params, buffers = t.init(jax.random.PRNGKey(0))
+    H = t.sketch_matrix(buffers)
+    # one 1 in the main block and one in the helper block per (row, column)
+    assert H.shape == (D1, t.c * 2 * t.k)
+    assert np.allclose(H.sum(axis=1), 2 * t.c)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_gradients_flow(method):
+    t = make(method)
+    params, buffers = t.init(jax.random.PRNGKey(0))
+    ids = jnp.asarray([1, 2, 3])
+
+    def loss(p):
+        return (t.lookup(p, buffers, ids) ** 2).sum()
+
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0

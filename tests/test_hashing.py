@@ -1,0 +1,70 @@
+"""Universal hashing: correctness, numpy/jnp equivalence, distribution."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@given(seed=st.integers(0, 2**30), m=st.integers(2, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_hash_range_and_np_equivalence(seed, m):
+    h = hashing.make_hash(seed, m)
+    ids = np.arange(0, 5000, 7)
+    out_np = h.np(ids)
+    out_j = np.asarray(h(jnp.asarray(ids)))
+    assert np.array_equal(out_np, out_j)
+    assert out_np.min() >= 0 and out_np.max() < m
+
+
+def test_hash_deterministic_per_seed():
+    a = hashing.make_hash(42, 1000)
+    b = hashing.make_hash(42, 1000)
+    c = hashing.make_hash(43, 1000)
+    assert (a.a, a.b) == (b.a, b.b)
+    assert (a.a, a.b) != (c.a, c.b)
+
+
+def test_hash_spread():
+    """Buckets should be roughly uniform (chi-square sanity, not strict)."""
+    h = hashing.make_hash(7, 64)
+    vals = h.np(np.arange(64 * 1000))
+    counts = np.bincount(vals, minlength=64)
+    assert counts.min() > 600 and counts.max() < 1500
+
+
+def test_make_hashes_distinct():
+    hs = hashing.make_hashes(5, 4, 100)
+    assert len({(h.a, h.b) for h in hs}) == 4
+
+
+def test_sign_hash_balanced():
+    s = hashing.make_sign_hash(3)
+    vals = np.asarray(s(jnp.arange(10000)))
+    assert set(np.unique(vals)) == {-1, 1}
+    assert abs(vals.mean()) < 0.05
+
+
+def test_countsketch_matrix_structure():
+    import jax
+
+    H = hashing.countsketch_matrix(jax.random.PRNGKey(0), 200, 32)
+    assert H.shape == (200, 32)
+    # exactly one nonzero per row, values in {-1, +1}
+    nz = (H != 0).sum(axis=1)
+    assert np.array_equal(nz, np.ones(200))
+    assert set(np.unique(H[H != 0])) <= {-1.0, 1.0}
+
+
+def test_countsketch_norm_preservation():
+    """Charikar et al.: E||Hx||^2 = ||x||^2 — check the empirical mean."""
+    import jax
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=500).astype(np.float32)
+    ratios = []
+    for s in range(30):
+        H = hashing.countsketch_matrix(jax.random.PRNGKey(s), 500, 128)
+        ratios.append(float((x @ H) @ (x @ H)) / float(x @ x))
+    assert abs(np.mean(ratios) - 1.0) < 0.15

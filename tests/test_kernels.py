@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + gradients.
+
+Kernels run in interpret mode on CPU (the brief's validation contract);
+on TPU the same pallas_call compiles to Mosaic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("c", [1, 2, 4])
+@pytest.mark.parametrize("T", [1, 2])
+@pytest.mark.parametrize("B,k,dsub", [(8, 16, 8), (33, 70, 24), (128, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cce_lookup_matches_ref(c, T, B, k, dsub, dtype):
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (c, B, T), 0, k)
+    tables = jax.random.normal(key, (c, T, k, dsub)).astype(dtype)
+    got = ops.cce_lookup(idx, tables)
+    want = ref.cce_lookup_ref(idx, tables)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2,
+    )
+
+
+@given(
+    b=st.integers(1, 40), k=st.integers(2, 90), dsub=st.sampled_from([4, 8, 16])
+)
+@settings(max_examples=10, deadline=None)
+def test_cce_lookup_hypothesis_shapes(b, k, dsub):
+    key = jax.random.PRNGKey(1)
+    idx = jax.random.randint(key, (2, b, 2), 0, k)
+    tables = jax.random.normal(key, (2, 2, k, dsub), jnp.float32)
+    got = ops.cce_lookup(idx, tables)
+    want = ref.cce_lookup_ref(idx, tables)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_cce_lookup_grad_is_scatter_add():
+    """Backward = one-hot^T @ dout: compare against jax autodiff of the ref."""
+    key = jax.random.PRNGKey(2)
+    c, B, T, k, dsub = 2, 16, 2, 24, 8
+    idx = jax.random.randint(key, (c, B, T), 0, k)
+    tables = jax.random.normal(key, (c, T, k, dsub), jnp.float32)
+
+    def loss_kernel(t):
+        return (ops.cce_lookup(idx, t) ** 2).sum()
+
+    def loss_ref(t):
+        return (ref.cce_lookup_ref(idx, t) ** 2).sum()
+
+    g1 = jax.grad(loss_kernel)(tables)
+    g2 = jax.grad(loss_ref)(tables)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d", [(16, 8, 4), (100, 33, 7), (256, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_matches_ref(n, k, d, dtype):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (n, d)).astype(dtype)
+    cen = jax.random.normal(jax.random.fold_in(key, 1), (k, d)).astype(dtype)
+    got = ops.kmeans_assign(x, cen)
+    want = ref.kmeans_assign_ref(x, cen)
+    # ties can differ between argmin orders at low precision; check distances
+    xf = np.asarray(x, np.float32)
+    cf = np.asarray(cen, np.float32)
+    d_got = ((xf - cf[np.asarray(got)]) ** 2).sum(-1)
+    d_want = ((xf - cf[np.asarray(want)]) ** 2).sum(-1)
+    np.testing.assert_allclose(d_got, d_want, rtol=2e-2, atol=1e-3)
+
+
+def test_kmeans_assign_exact_f32():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (200, 16), jnp.float32)
+    cen = jax.random.normal(jax.random.fold_in(key, 1), (40, 16), jnp.float32)
+    got = np.asarray(ops.kmeans_assign(x, cen))
+    want = np.asarray(ref.kmeans_assign_ref(x, cen))
+    assert (got == want).mean() > 0.99  # float assoc. order may flip rare ties
+
+
+def test_cce_logits_ref_consistency():
+    """Factored logits oracle == brute-force embedding materialization."""
+    key = jax.random.PRNGKey(5)
+    c, V, T, k, dsub, B = 2, 50, 2, 12, 4, 3
+    idx = jax.random.randint(key, (c, V, T), 0, k)
+    tables = jax.random.normal(key, (c, T, k, dsub), jnp.float32)
+    h = jax.random.normal(jax.random.fold_in(key, 1), (B, c * dsub), jnp.float32)
+    E = ref.cce_lookup_ref(jnp.moveaxis(idx, 1, 1), tables)  # (V, c*dsub)
+    want = h @ E.T
+    got = ref.cce_logits_ref(h, idx, tables)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

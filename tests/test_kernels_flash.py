@@ -1,0 +1,50 @@
+"""Flash-attention Pallas kernel vs the dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("Sq,S,H,KVH,D", [
+    (128, 128, 4, 2, 16),
+    (256, 256, 2, 1, 32),
+    (64, 64, 8, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_dense(Sq, S, H, KVH, D, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (2, Sq, H, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (2, S, KVH, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(kv, (2, S, KVH, D)) * 0.5).astype(dtype)
+    got = ops.flash_attention(q, k, v, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+def test_flash_blocks_smaller_than_seq():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 256, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 16), jnp.float32)
+    for bq, bk in ((32, 64), (64, 32), (128, 128)):
+        got = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_flash_first_row_attends_self_only():
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (1, 64, 1, 8), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 1, 8), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 1, 8), jnp.float32)
+    out = ops.flash_attention(q, k, v, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(out[0, 0, 0]), np.asarray(v[0, 0, 0]),
+                               rtol=1e-5)

@@ -1,0 +1,88 @@
+"""Theorem 3.1 and Algorithms 1 & 2 — the paper's provable core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import least_squares as ls
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (300, 60))
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (300, 6))
+    return X, Y
+
+
+def test_dense_cce_beats_theorem_bound(problem):
+    """Theorem 3.1 is an UPPER bound in expectation; a single run should
+    track or beat it (loose factor for randomness)."""
+    X, Y = problem
+    k, iters = 20, 25
+    tr = ls.dense_cce(jax.random.PRNGKey(2), X, Y, k, iters)
+    bound = ls.theorem_bound(X, Y, k, iters)
+    opt, _ = ls.optimal_loss(X, Y)
+    # excess loss vs the bound's excess, iteration-wise
+    excess = np.asarray(tr.losses) - float(opt)
+    bexcess = np.asarray(bound) - float(opt)
+    # allow 3x slack at each of a few checkpoints (expectation vs sample)
+    for i in (5, 10, 20, 25):
+        assert excess[i] <= 3 * bexcess[i] + 1e-3, (i, excess[i], bexcess[i])
+
+
+def test_dense_cce_converges_to_opt(problem):
+    X, Y = problem
+    tr = ls.dense_cce(jax.random.PRNGKey(3), X, Y, k=20, iters=60)
+    opt, _ = ls.optimal_loss(X, Y)
+    assert float(tr.losses[-1]) < 1.02 * float(opt)
+
+
+def test_smart_noise_converges_faster(problem):
+    """Appendix B: SVD-aligned noise has the better rate (1-1/d)^ik."""
+    X, Y = problem
+    k, iters = 20, 30
+    plain = ls.dense_cce(jax.random.PRNGKey(4), X, Y, k, iters)
+    smart = ls.dense_cce(jax.random.PRNGKey(4), X, Y, k, iters, smart_noise=True)
+    opt, _ = ls.optimal_loss(X, Y)
+    assert float(smart.losses[-1]) - float(opt) <= float(plain.losses[-1]) - float(opt) + 1e-3
+
+
+def test_sparse_cce_decreases(problem):
+    X, Y = problem
+    tr = ls.sparse_cce(jax.random.PRNGKey(5), X, Y, k=24, iters=8)
+    losses = np.asarray(tr.losses)
+    assert losses[-1] < losses[0]
+    # monotone non-increasing up to small noise
+    assert (np.diff(losses) < 1e-3).mean() > 0.7
+
+
+def test_sparse_cce_beats_pure_sketch(problem):
+    """One iteration == random count-sketch (A empty-ish); more iterations
+    must improve on it — the paper's 'learned beats random sketching'."""
+    X, Y = problem
+    one = ls.sparse_cce(jax.random.PRNGKey(6), X, Y, k=24, iters=1)
+    many = ls.sparse_cce(jax.random.PRNGKey(6), X, Y, k=24, iters=8)
+    assert float(many.losses[-1]) < float(one.losses[-1])
+
+
+def test_kmeans_factorize_quality():
+    """Figure 1b's comparison lines: K-means factorization of the exact
+    solution; 2 ones per row (residual step) beats 1."""
+    key = jax.random.PRNGKey(7)
+    # low-rank-ish T so clustering its rows is meaningful
+    U = jax.random.normal(key, (80, 3))
+    V = jax.random.normal(jax.random.fold_in(key, 1), (3, 8))
+    T = U @ V + 0.05 * jax.random.normal(jax.random.fold_in(key, 2), (80, 8))
+    t1 = ls.kmeans_factorize(key, T, k=16, ones_per_row=1)
+    t2 = ls.kmeans_factorize(key, T, k=16, ones_per_row=2)
+    e1 = float(jnp.sum((t1 - T) ** 2))
+    e2 = float(jnp.sum((t2 - T) ** 2))
+    assert e2 <= e1 * 1.05
+    assert e1 < float(jnp.sum(T**2))
+
+
+def test_bound_is_monotone_decreasing(problem):
+    X, Y = problem
+    bound = np.asarray(ls.theorem_bound(X, Y, k=20, iters=10))
+    assert (np.diff(bound) <= 1e-6).all()

@@ -1,0 +1,149 @@
+"""Training loop: accumulation equivalence, fault tolerance, restart-exact
+resume, straggler monitor, CCE clustering callback."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import dlrm_criteo
+from repro.data import ClickstreamConfig, clickstream_batches
+from repro.models import dlrm
+from repro.optim import adamw, sgd
+from repro.train.loop import (
+    FailureInjector,
+    StragglerMonitor,
+    Trainer,
+    init_state,
+    make_train_step,
+    merge_buffers,
+    split_buffers,
+)
+
+
+def _setup(emb="cce", accum=1, seed=0):
+    cfg = dlrm_criteo.reduced(emb_method=emb, cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static,
+                           accum=accum)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed), 32 * accum
+    )
+    return cfg, step, state, static, data
+
+
+def test_loss_decreases():
+    cfg, step, state, static, data = _setup()
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static, data)
+    hist = tr.run(40)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.01, (first, last)
+
+
+def test_split_merge_roundtrip():
+    cfg = dlrm_criteo.reduced()
+    _, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    dyn, static = split_buffers(buffers)
+    back = merge_buffers(dyn, static)
+    assert jax.tree.structure(back) == jax.tree.structure(buffers)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(buffers)):
+        if hasattr(a, "shape"):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            assert a == b
+
+
+def test_grad_accum_equivalence():
+    """accum=2 over the same 64 samples == accum=1 (up to float assoc)."""
+    _, step1, state1, static, _ = _setup(accum=1)
+    _, step2, state2, _, _ = _setup(accum=2)
+    data = next(clickstream_batches(
+        ClickstreamConfig(seed=3,
+                          vocab_sizes=dlrm_criteo.reduced().vocab_sizes), 64))
+    b1 = {k: np.asarray(v)[None] for k, v in data.items() if k != "step"}
+    b2 = {k: np.asarray(v).reshape(2, 32, *np.asarray(v).shape[1:])
+          for k, v in data.items() if k != "step"}
+    s1, m1 = step1(state1, b1)
+    s2, m2 = step2(state2, b2)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6)
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Kill at step 7 (injected), restore, replay — final params bitwise
+    equal to an uninterrupted run (deterministic data by (seed, step))."""
+    def run(fail: bool):
+        cfg, step, state, static, data = _setup(seed=1)
+        tr = Trainer(
+            jax.jit(step, donate_argnums=(0,)), state, static, data,
+            ckpt_dir=str(tmp_path / ("a" if fail else "b")),
+            ckpt_every=5,
+            failures=FailureInjector((7,)) if fail else None,
+        )
+        if fail:
+            with pytest.raises(RuntimeError):
+                tr.run(12)
+            # restart: restore + rebuild the data stream from the step
+            restored = tr.restore_latest()
+            assert restored == 5
+            cfg2, step2, _, static2, _ = _setup(seed=1)
+            data2 = clickstream_batches(
+                ClickstreamConfig(vocab_sizes=cfg2.vocab_sizes, seed=1),
+                32, start_step=restored,
+            )
+            tr2 = Trainer(jax.jit(step2, donate_argnums=(0,)), tr.state,
+                          static2, data2, ckpt_dir=str(tmp_path / "a"))
+            tr2.run(12 - restored)
+            return tr2.state
+        tr.run(12)
+        return tr.state
+
+    s_fail = run(True)
+    s_clean = run(False)
+    for a, b in zip(jax.tree.leaves(s_fail.params), jax.tree.leaves(s_clean.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cluster_callback_runs_and_training_continues():
+    cfg, step, state, static, data = _setup(emb="cce")
+
+    def cluster_fn(key, params, buffers):
+        return dlrm.cluster_tables(key, params, buffers, cfg)
+
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static, data,
+                 cluster_fn=cluster_fn, cluster_every=10, cluster_max=2)
+    hist = tr.run(25)
+    assert tr.clusters_done == 2
+    assert np.isfinite(hist[-1]["loss"])
+    # training still improves after clustering
+    assert np.mean([h["loss"] for h in hist[-5:]]) < np.mean(
+        [h["loss"] for h in hist[:5]]) + 0.05
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(warmup=3, k=3.0)
+    for i in range(20):
+        mon.observe(i, 0.10 + 0.001 * (i % 3))
+    assert not mon.flagged
+    assert mon.observe(20, 1.0)  # 10x outlier
+    assert mon.flagged[-1][0] == 20
+    # EMA not poisoned: next normal step is not flagged
+    assert not mon.observe(21, 0.101)
+
+
+def test_failure_injector_fires_once():
+    fi = FailureInjector((3,))
+    fi.maybe_fail(2)
+    with pytest.raises(RuntimeError):
+        fi.maybe_fail(3)
+    fi.maybe_fail(3)  # second pass: already fired
