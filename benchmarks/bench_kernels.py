@@ -50,6 +50,32 @@ def main(out=print):
     rows.append(("kmeans_assign_ref", t_ref, bytes_model, flops_model))
     rows.append(("kmeans_assign_kernel_interp", t_ker, bytes_model, flops_model))
 
+    # the transition's full-vocab assignment pass (CCE.assign_all): one
+    # chunked materialization, per-column assign via the jnp path vs the
+    # Pallas kernel route
+    from repro.core.cce import CCE
+
+    cce = CCE(d1=8192, d2=64, k=256, c=4)
+    cparams, cbuffers = cce.init(key)
+    cents = jax.random.normal(
+        jax.random.fold_in(key, 2), (cce.c, cce.k, cce.dsub), jnp.float32
+    )
+    t_jnp = timeit(
+        jax.jit(lambda p, b, c: cce.assign_all(p, b, c, chunk_size=2048,
+                                               use_kernel=False)),
+        cparams, cbuffers, cents,
+    )
+    t_ker = timeit(
+        jax.jit(lambda p, b, c: cce.assign_all(p, b, c, chunk_size=2048,
+                                               use_kernel=True)),
+        cparams, cbuffers, cents,
+    )
+    bytes_model = 4 * (cce.c * cce.d1 * cce.dsub + cce.c * cce.k * cce.dsub
+                       + cce.c * cce.d1)
+    flops_model = 2 * cce.c * cce.d1 * cce.k * cce.dsub
+    rows.append(("cce_assign_all_jnp", t_jnp, bytes_model, flops_model))
+    rows.append(("cce_assign_all_kernel_interp", t_ker, bytes_model, flops_model))
+
     out("name,us_per_call,bytes_model,flops_model")
     for r in rows:
         out(f"{r[0]},{r[1]:.0f},{r[2]},{r[3]}")

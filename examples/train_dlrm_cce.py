@@ -16,6 +16,7 @@ from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
 from repro.optim import sgd
+from repro.train.freq import IdFrequencyTracker
 from repro.train.loop import (
     FailureInjector, Trainer, init_state, make_train_step, merge_buffers,
     split_buffers,
@@ -43,8 +44,11 @@ def main():
     state = init_state(params, opt, dyn)
     data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0)
 
-    def cluster_fn(key, p, b):
-        return dlrm.cluster_tables(key, p, b, cfg)
+    tracker = IdFrequencyTracker(cfg.vocab_sizes)
+
+    def cluster_fn(key, p, b, opt_state):
+        return dlrm.cluster_tables(key, p, b, cfg, opt_state,
+                                   id_counts=tracker.counts)
 
     ckpt_dir = tempfile.mkdtemp(prefix="dlrm_cce_")
     ckpt_every = max(10, args.steps // 6)
@@ -54,7 +58,7 @@ def main():
         clickstream_batches(data_cfg, args.batch),
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         cluster_fn=cluster_fn, cluster_every=args.steps // 4, cluster_max=3,
-        failures=FailureInjector((fail_step,)),
+        id_tracker=tracker, failures=FailureInjector((fail_step,)),
     )
 
     try:

@@ -1,0 +1,39 @@
+"""Compatibility shims for jax API drift.
+
+The repo targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.set_mesh``, dict-valued ``Compiled.cost_analysis()``), but
+must also run on the 0.4.x line this container ships.  Every call site
+that would otherwise need a version check imports from here instead.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.4.35 exports it at top level as jax.shard_map
+    shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` (new) or the ``with mesh:`` thread-local
+    context (0.4.x) — both make ``mesh`` ambient for jit/PartitionSpec."""
+    setter = getattr(jax.sharding, "set_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()``: newer jax returns one dict,
+    older returns a list with one dict per partition."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

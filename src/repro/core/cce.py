@@ -15,9 +15,14 @@ can undo bad merges.
 
 State layout (chosen for the TPU kernels and for sharding):
 
-    params["tables"] : (c, 2, k, dsub)  — [:,0] main M, [:,1] helper M'
-    buffers["ptr"]   : (c, d1) int32    — learned pointer arrays h_i
-    buffers["hs"]    : c × (a, b)       — multiply-shift coeffs for h'_i
+    params["tables"]  : (c, 2, k, dsub) — [:,0] main M, [:,1] helper M'
+    buffers["ptr"]    : (c, d1) int32   — learned pointer arrays h_i
+    buffers["hs"]     : (c, 2) uint32   — multiply-shift coeffs for h'_i
+    buffers["epoch"]  : () int32        — transition counter (keys cluster())
+
+All three buffers are ARRAYS and change on cluster(); they must ride the
+train state dynamically (python-int leaves would be closed over statically
+by the jitted step and go stale after a transition).
 
 The pointer arrays are plain int32 tensors: on a pod they are host-resident
 and ride the input pipeline (ids are translated to per-column rows on host,
@@ -72,15 +77,20 @@ class CCE:
     def init_buffers(self):
         """Device-free buffer init (numpy): hash coefficients derive from
         ``seed_salt`` so abstract (eval_shape) and real inits agree, and the
-        pointer table never touches a device mesh."""
+        pointer table never touches a device mesh.
+
+        Every buffer is an ARRAY (``hs`` a (c, 2) uint32 coefficient pack,
+        ``epoch`` a 0-d int32): the transition rewrites all three, and only
+        array leaves ride ``TrainState.ebuf`` through the jitted step —
+        python ints would be closed over statically and the step would keep
+        training against the pre-transition hash functions."""
         ptr_hashes = hashing.make_hashes(self.seed_salt * 7919 + 66, self.c, self.k)
         ids = np.arange(self.d1)
         ptr = np.stack([h.np(ids) for h in ptr_hashes])  # (c, d1) int32
-        hs = tuple(
-            (h.a, h.b)
-            for h in hashing.make_hashes(self.seed_salt * 7919 + 77, self.c, self.k)
+        hs = hashing.pack_hashes(
+            hashing.make_hashes(self.seed_salt * 7919 + 77, self.c, self.k)
         )
-        return {"ptr": ptr, "hs": hs, "epoch": 0}
+        return {"ptr": ptr, "hs": hs, "epoch": np.int32(0)}
 
     def init(self, key):
         km_ = jax.random.fold_in(key, self.seed_salt)
@@ -94,11 +104,10 @@ class CCE:
     # --- lookup ---------------------------------------------------------
 
     def _helper_rows(self, buffers, ids):
-        return jnp.stack(
-            [
-                hashing.MultiplyShiftHash(int(a), int(b), self.k)(ids)
-                for (a, b) in buffers["hs"]
-            ]
+        hs = jnp.asarray(buffers["hs"])  # (c, 2) uint32, possibly traced
+        shape = (self.c,) + (1,) * jnp.ndim(ids)
+        return hashing.multiply_shift(
+            ids[None], hs[:, 0].reshape(shape), hs[:, 1].reshape(shape), self.k
         )  # (c, ...)
 
     def _rows(self, buffers, ids):
@@ -148,6 +157,68 @@ class CCE:
             tabs[:, 0], rows[..., 0]
         ) + jax.vmap(lambda t, r: t[r])(tabs[:, 1], rows[..., 1])
 
+    def _id_chunks(self, chunk_size: int | None):
+        """Full-vocab id ranges: one range when unchunked, else a stream of
+        ``chunk_size`` slices so (c, d1, dsub) is never materialized."""
+        if not chunk_size or chunk_size >= self.d1:
+            yield jnp.arange(self.d1)
+            return
+        for s in range(0, self.d1, chunk_size):
+            yield jnp.arange(s, min(s + chunk_size, self.d1))
+
+    def assign_all(
+        self,
+        params,
+        buffers,
+        centroids: jax.Array,
+        *,
+        chunk_size: int | None = None,
+        use_kernel: bool | None = None,
+    ) -> jax.Array:
+        """Single-pass full-vocab nearest-centroid assignment.
+
+        ``centroids`` (c, k, dsub) -> (c, d1) int32.  The vocabulary is
+        materialized exactly once (Alg. 3 line 13), in ``chunk_size`` id
+        slices; per chunk the assignment routes through the Pallas
+        ``kmeans_assign`` kernel when ``use_kernel`` (default: on TPU
+        only — the kernel carries its (min, argmin) accumulator across
+        the k grid axis, which needs TPU's sequential grid; GPU gets the
+        jnp argmin path).  Chunking is bit-exact: distances are computed
+        row-wise, so the chunk boundaries cannot change any argmin.
+        """
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        outs = []
+        for ids in self._id_chunks(chunk_size):
+            emb = self.materialize(params, buffers, ids)  # (c, n, dsub)
+            outs.append(
+                jnp.stack(
+                    [
+                        km.assign(emb[i], centroids[i], use_kernel=use_kernel)
+                        for i in range(self.c)
+                    ]
+                )
+            )
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+    def _finish_transition(self, key, centroids, assignments, buffers):
+        """Common tail of cluster()/cluster_sharded(): install centroids as
+        the main tables, zero the helper tables (Alg. 3 line 17), draw
+        fresh helper hashes, advance the epoch."""
+        tables = jnp.stack(
+            [centroids.astype(self.dtype), jnp.zeros_like(centroids, self.dtype)],
+            axis=1,
+        )  # (c, 2, k, dsub)
+        hs = hashing.pack_hashes(
+            hashing.make_hashes(jax.random.fold_in(key, 777), self.c, self.k)
+        )
+        new_buffers = {
+            "ptr": assignments,
+            "hs": hs,
+            "epoch": jnp.asarray(buffers["epoch"], jnp.int32) + 1,
+        }
+        return {"tables": tables}, new_buffers
+
     def cluster(
         self,
         key,
@@ -157,46 +228,128 @@ class CCE:
         sample_ids: jax.Array | None = None,
         niter: int = 50,
         max_points_per_centroid: int = 256,
+        chunk_size: int | None = None,
+        use_kernel: bool | None = None,
     ):
         """One CCE iteration: returns new (params, buffers).
 
         K-means runs on a sample (FAISS-style, 256 pts/centroid by default,
-        paper §Reproducibility); assignments for the FULL vocab are then one
-        nearest-centroid pass per column.
+        paper §Reproducibility); assignments for the FULL vocab are then
+        ONE materialization pass shared by all columns (``assign_all``) —
+        the per-column recompute this replaces was O(c²·d1·dsub).
         """
         k1, k2 = jax.random.split(jax.random.fold_in(key, buffers["epoch"]))
         if sample_ids is None:
-            idx = km.subsample(k1, self.d1, self.k, max_points_per_centroid)
-            sample_ids = jnp.arange(self.d1)[idx] if idx.shape[0] != self.d1 else idx
+            sample_ids = km.subsample(k1, self.d1, self.k, max_points_per_centroid)
 
         sample = self.materialize(params, buffers, sample_ids)  # (c, n, dsub)
-        new_tables = []
-        new_ptr = []
-        all_ids = jnp.arange(self.d1)
-        for i in range(self.c):
-            res = km.kmeans(jax.random.fold_in(k2, i), sample[i], self.k, niter=niter)
-            # full-vocab assignment against the final centroids
-            full = self.materialize(params, buffers, all_ids)[i]
-            assignments = km.assign(full, res.centroids)
-            new_ptr.append(assignments)
-            helper = jnp.zeros((self.k, self.dsub), self.dtype)
-            new_tables.append(
-                jnp.stack([res.centroids.astype(self.dtype), helper])
-            )
-        # fresh random helper hashes
-        hs = tuple(
-            (h.a, h.b)
-            for h in hashing.make_hashes(
-                jax.random.fold_in(k2, 777), self.c, self.k
-            )
+        centroids = jnp.stack(
+            [
+                km.kmeans(
+                    jax.random.fold_in(k2, i), sample[i], self.k, niter=niter
+                ).centroids
+                for i in range(self.c)
+            ]
+        )  # (c, k, dsub)
+        new_ptr = self.assign_all(
+            params, buffers, centroids, chunk_size=chunk_size, use_kernel=use_kernel
         )
-        params = {"tables": jnp.stack(new_tables)}
-        buffers = {
-            "ptr": jnp.stack(new_ptr),
-            "hs": hs,
-            "epoch": buffers["epoch"] + 1,
-        }
-        return params, buffers
+        return self._finish_transition(k2, centroids, new_ptr, buffers)
+
+    def cluster_sharded(
+        self,
+        key,
+        params,
+        buffers,
+        mesh,
+        *,
+        axis_name: str = "data",
+        sample_ids: jax.Array | None = None,
+        niter: int = 50,
+        max_points_per_centroid: int = 256,
+        chunk_size: int | None = None,
+        use_kernel: bool | None = None,
+    ):
+        """Distributed transition: k-means runs data-parallel over
+        ``axis_name`` (local (sum, count) moments + psum — see
+        ``kmeans.distributed_kmeans``) so pod-scale tables cluster in place
+        without gathering the sample to one host.  Every shard ends with
+        identical centroids; the full-vocab assignment then reuses the same
+        single-pass ``assign_all``.  On a 1-device axis this reproduces
+        ``cluster()`` exactly (same key schedule, psum degenerates to
+        identity)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        nsh = mesh.shape[axis_name]
+        k1, k2 = jax.random.split(jax.random.fold_in(key, buffers["epoch"]))
+        if sample_ids is None:
+            sample_ids = km.subsample(k1, self.d1, self.k, max_points_per_centroid)
+        # shard the sample evenly; the (< nsh) remainder is dropped, which
+        # FAISS-style subsampling tolerates by construction
+        n = sample_ids.shape[0] - sample_ids.shape[0] % nsh
+        sample = self.materialize(params, buffers, sample_ids[:n])  # (c, n, dsub)
+
+        def per_shard(sample_local):
+            return jnp.stack(
+                [
+                    km.distributed_kmeans(
+                        jax.random.fold_in(k2, i),
+                        sample_local[i],
+                        self.k,
+                        axis_name,
+                        niter=niter,
+                    )[0]
+                    for i in range(self.c)
+                ]
+            )
+
+        centroids = compat.shard_map(
+            per_shard, mesh=mesh, in_specs=P(None, axis_name), out_specs=P()
+        )(sample)
+        new_ptr = self.assign_all(
+            params, buffers, centroids, chunk_size=chunk_size, use_kernel=use_kernel
+        )
+        return self._finish_transition(k2, centroids, new_ptr, buffers)
+
+    def assignment_counts(self, buffers) -> jax.Array:
+        """Per-cluster id counts (c, k) from the pointer table.  Depends
+        only on the assignments — callers remapping several moment slots
+        (Adam's m AND v) compute it once and pass it to every
+        ``remap_moments`` call."""
+        ptr = jnp.asarray(buffers["ptr"])
+        return jax.vmap(lambda a: jnp.bincount(a, length=self.k))(ptr).astype(
+            jnp.float32
+        )
+
+    def remap_moments(self, moments, old_buffers, new_buffers, *,
+                      chunk_size=None, counts=None):
+        """Carry per-row optimizer moments (momentum / Adam m, v) through a
+        cluster() transition.
+
+        ``moments`` mirrors params ({"tables": (c, 2, k, dsub)}) and
+        describes the OLD rows; the transition rewrote both tables and the
+        pointer array, so applying them unchanged starves freshly-written
+        centroids with stale second moments (the CAFE failure mode).  The
+        remap is the moment-space analog of the centroid update: an id's
+        virtual moment is its materialized row-sum (main + helper) under
+        the OLD pointers, and each new main row j takes the mean over the
+        ids assigned to it; the fresh helper table starts at zero moments,
+        matching its zero-initialized params.  Streams the vocab in
+        ``chunk_size`` slices like ``assign_all``.
+        """
+        mt = jnp.asarray(moments["tables"])
+        new_ptr = jnp.asarray(new_buffers["ptr"])  # (c, d1) assignments
+        if counts is None:
+            counts = self.assignment_counts(new_buffers)  # (c, k)
+        sums = jnp.zeros((self.c, self.k, self.dsub), jnp.float32)
+        seg = lambda vals, idx: jax.ops.segment_sum(vals, idx, num_segments=self.k)
+        for ids in self._id_chunks(chunk_size):
+            per_id = self.materialize({"tables": mt}, old_buffers, ids)
+            sums = sums + jax.vmap(seg)(per_id.astype(jnp.float32), new_ptr[:, ids])
+        mean = (sums / jnp.maximum(counts[..., None], 1.0)).astype(mt.dtype)
+        return {"tables": jnp.stack([mean, jnp.zeros_like(mean)], axis=1)}
 
     # --- diagnostics (Appendix H) ----------------------------------------
 

@@ -29,14 +29,9 @@ class MultiplyShiftHash:
     m: int  # range
 
     def __call__(self, ids: jax.Array) -> jax.Array:
-        x = ids.astype(jnp.uint32)
-        h = x * jnp.uint32(self.a) + jnp.uint32(self.b)
-        # fibonacci-style mix then reduce to range; m need not be a power of 2
-        h = (h ^ (h >> 15)) * _MERSENNE
-        h = h ^ (h >> 13)
-        # map to [0, m) by modulo — bias is O(m / 2^32), irrelevant for the
-        # table sizes here, and it avoids uint64 (not available w/o x64).
-        return (h % jnp.uint32(self.m)).astype(jnp.int32)
+        # delegates to the array-coefficient pipeline so the static and
+        # dynamic hs representations stay bit-exact by construction
+        return multiply_shift(ids, jnp.uint32(self.a), jnp.uint32(self.b), self.m)
 
     def np(self, ids: np.ndarray) -> np.ndarray:
         """Pure-numpy twin (bit-exact with __call__) — host-side pointer
@@ -47,6 +42,29 @@ class MultiplyShiftHash:
             h = (h ^ (h >> np.uint32(15))) * _MERSENNE
             h = h ^ (h >> np.uint32(13))
             return (h % np.uint32(self.m)).astype(np.int32)
+
+
+def multiply_shift(ids, a, b, m: int):
+    """THE jnp multiply-shift pipeline — ``MultiplyShiftHash.__call__``
+    delegates here, and ``.np`` is its bit-exact numpy twin.  ``a``/``b``
+    may be traced uint32 arrays (hash coefficients that ride the train
+    state so the clustering transition can refresh them without
+    re-jitting), broadcast against ``ids``."""
+    x = jnp.asarray(ids).astype(jnp.uint32)
+    h = x * jnp.asarray(a).astype(jnp.uint32) + jnp.asarray(b).astype(jnp.uint32)
+    # fibonacci-style mix then reduce to range; m need not be a power of 2.
+    # modulo bias is O(m / 2^32) — irrelevant at these table sizes, and it
+    # avoids uint64 (not available without x64).
+    h = (h ^ (h >> 15)) * _MERSENNE
+    h = h ^ (h >> 13)
+    return (h % jnp.uint32(m)).astype(jnp.int32)
+
+
+def pack_hashes(hashes) -> np.ndarray:
+    """(n, 2) uint32 coefficient array from MultiplyShiftHash list — the
+    dynamic-buffer representation (arrays ride TrainState.ebuf; python-int
+    tuples would be closed over statically and go stale after cluster())."""
+    return np.asarray([[h.a, h.b] for h in hashes], np.uint32)
 
 
 @dataclasses.dataclass(frozen=True)

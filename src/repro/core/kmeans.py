@@ -60,8 +60,8 @@ def kmeans_plus_plus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return centroids
 
 
-def _lloyd_step(x, centroids, k):
-    a = assign(x, centroids)
+def _lloyd_step(x, centroids, k, use_kernel: bool = False):
+    a = assign(x, centroids, use_kernel=use_kernel)
     onehot = jax.nn.one_hot(a, k, dtype=x.dtype)  # (n, k)
     counts = onehot.sum(axis=0)  # (k,)
     sums = onehot.T @ x  # (k, d)
@@ -72,20 +72,24 @@ def _lloyd_step(x, centroids, k):
     return new_c, a, inertia
 
 
-@partial(jax.jit, static_argnames=("k", "niter"))
+@partial(jax.jit, static_argnames=("k", "niter", "use_kernel"))
 def kmeans(
     key: jax.Array,
     x: jax.Array,
     k: int,
     niter: int = 50,
+    use_kernel: bool = False,
 ) -> KMeansResult:
-    """Full-batch Lloyd's algorithm with kmeans++ init."""
+    """Full-batch Lloyd's algorithm with kmeans++ init.  ``use_kernel``
+    routes every per-iteration assignment through the Pallas kernel
+    (worth it on TPU at clustering scale; interpret-mode on CPU is for
+    validation only)."""
     x = x.astype(jnp.float32)
     centroids = kmeans_plus_plus(key, x, k)
 
     def body(_, carry):
         c, _, _ = carry
-        return _lloyd_step(x, c, k)
+        return _lloyd_step(x, c, k, use_kernel)
 
     a0 = jnp.zeros((x.shape[0],), jnp.int32)
     centroids, a, inertia = jax.lax.fori_loop(
@@ -109,8 +113,9 @@ def subsample(key: jax.Array, n: int, k: int, max_points_per_centroid: int = 256
 # loop; on 1 device it degenerates to the serial algorithm.
 
 
-def distributed_lloyd_iter(x_local: jax.Array, centroids: jax.Array, k: int, axis_name: str):
-    a = assign(x_local, centroids)
+def distributed_lloyd_iter(x_local: jax.Array, centroids: jax.Array, k: int,
+                           axis_name: str, use_kernel: bool = False):
+    a = assign(x_local, centroids, use_kernel=use_kernel)
     onehot = jax.nn.one_hot(a, k, dtype=x_local.dtype)
     counts = jax.lax.psum(onehot.sum(axis=0), axis_name)
     sums = jax.lax.psum(onehot.T @ x_local, axis_name)
@@ -125,6 +130,7 @@ def distributed_kmeans(
     k: int,
     axis_name: str,
     niter: int = 50,
+    use_kernel: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Run inside shard_map/pmap over ``axis_name``.  Seeds from the first
     shard's local sample (kmeans++ on local slice is a standard approximation)."""
@@ -138,8 +144,8 @@ def distributed_kmeans(
     )
 
     def body(_, c):
-        c, _ = distributed_lloyd_iter(x_local, c, k, axis_name)
+        c, _ = distributed_lloyd_iter(x_local, c, k, axis_name, use_kernel)
         return c
 
     centroids = jax.lax.fori_loop(0, niter, body, centroids)
-    return centroids, assign(x_local, centroids)
+    return centroids, assign(x_local, centroids, use_kernel=use_kernel)

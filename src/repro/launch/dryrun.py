@@ -27,7 +27,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
-from repro import configs  # noqa: E402
+from repro import compat, configs  # noqa: E402
 from repro.launch import hlo_cost, roofline, shapes as shp, steps  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
@@ -60,7 +60,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             jitted, (state_shape, batch_sds), _ = steps.build_train_step(
                 cfg, mesh, shape_name

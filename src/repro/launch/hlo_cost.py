@@ -26,6 +26,10 @@ import dataclasses
 import re
 from typing import Any
 
+from repro.compat import xla_cost_analysis  # noqa: F401  — re-exported: the
+# baseline this module corrects; normalizes the dict/list[dict] API drift
+# of Compiled.cost_analysis() across jax versions.
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,

@@ -23,6 +23,9 @@ from repro.data import clickstream_batches, lm_token_batches, ClickstreamConfig
 from repro.launch.mesh import make_host_mesh, batch_axes as mesh_batch_axes
 from repro.models import dlrm, lm
 from repro.optim import adamw, sgd, cosine_schedule
+from repro.optim.remap import remap_opt_state
+from repro.train.freq import IdFrequencyTracker
+from repro.train.transition import transition_table
 from repro.train.loop import (
     FailureInjector,
     StragglerMonitor,
@@ -51,18 +54,34 @@ def build_lm_trainer(cfg, args):
     )
 
     cluster_fn = None
+    tracker = None
     if cfg.emb_method == "cce":
         emb = lm.make_emb(cfg)
+        # token histogram feeds the transition's k-means sample; for
+        # codebook models the ids are offset per codebook inside embed(),
+        # so plain token counts don't map to table rows — fall back to
+        # uniform sampling there (ROADMAP follow-on)
+        if not cfg.n_codebooks:
+            tracker = IdFrequencyTracker((emb.d1,), key="tokens")
 
-        def cluster_fn(key, params, buffers):
-            ep, eb = emb.cluster(key, params["emb"], buffers["emb"])
-            return dict(params, emb=ep), dict(buffers, emb=eb)
+        def cluster_fn(key, params, buffers, opt):
+            ep, eb, update = transition_table(
+                emb, key, params["emb"], buffers["emb"],
+                counts=tracker.counts[0] if tracker is not None else None,
+                chunk_size=1 << 18,  # LM vocabs can be huge: stream the pass
+            )
+
+            def upd(moments, _slot):
+                return dict(moments, emb=update(moments["emb"]))
+
+            return (dict(params, emb=ep), dict(buffers, emb=eb),
+                    remap_opt_state(opt, upd))
 
     return Trainer(
         jax.jit(step, donate_argnums=(0,)), state, static, data,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         cluster_fn=cluster_fn, cluster_every=args.cluster_every,
-        accum=args.accum,
+        id_tracker=tracker, accum=args.accum,
         failures=FailureInjector(tuple(args.fail_at)),
         monitor=StragglerMonitor(),
         seed=args.seed,
@@ -88,14 +107,18 @@ def build_dlrm_trainer(args):
         ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=args.seed), args.batch
     )
 
-    def cluster_fn(key, params, buffers):
-        return dlrm.cluster_tables(key, params, buffers, cfg)
+    tracker = IdFrequencyTracker(cfg.vocab_sizes) if args.emb == "cce" else None
+
+    def cluster_fn(key, params, buffers, opt):
+        return dlrm.cluster_tables(key, params, buffers, cfg, opt,
+                                   id_counts=tracker.counts)
 
     return Trainer(
         jax.jit(step, donate_argnums=(0,)), state, static, data,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         cluster_fn=cluster_fn if args.emb == "cce" else None,
-        cluster_every=args.cluster_every, accum=args.accum,
+        cluster_every=args.cluster_every, id_tracker=tracker,
+        accum=args.accum,
         failures=FailureInjector(tuple(args.fail_at)),
         seed=args.seed,
     )

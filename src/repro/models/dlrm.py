@@ -29,6 +29,13 @@ class DLRMConfig:
     emb_method: str = "full"
     emb_param_cap: int = 0  # 0 = uncapped
     emb_c: int = 4
+    # CCE transition: what happens to per-row optimizer moments when
+    # cluster() rewrites a table ("remap" | "reset" | "keep" — see
+    # repro.optim.remap), and the id-chunk size for the full-vocab
+    # assignment pass (0 = unchunked; multi-million-row tables should
+    # stream so (c, d1, dsub) never materializes at once)
+    emb_opt_policy: str = "remap"
+    emb_cluster_chunk: int = 1 << 18
     dtype: Any = jnp.float32
 
     @property
@@ -118,16 +125,56 @@ def bce_loss(params, buffers, cfg: DLRMConfig, batch):
     return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
 
 
-def cluster_tables(key, params, buffers, cfg: DLRMConfig):
+def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
+                   id_counts=None, policy: str | None = None,
+                   chunk_size: int | None = None,
+                   use_kernel: bool | None = None,
+                   max_points_per_centroid: int = 256):
     """Run the CCE clustering transition on every CCE table (the training
-    callback — Alg. 3 `Cluster`)."""
-    from repro.core.cce import CCE
+    callback — Alg. 3 `Cluster`).
 
+    With ``opt`` (the optimizer state, e.g. from ``TrainState.opt``), the
+    per-row moments of every transitioned table are carried through the new
+    cluster assignments per ``policy`` (default ``cfg.emb_opt_policy``) and
+    the updated state is returned as a third element — the 4-arg
+    ``Trainer`` cluster protocol.  Without it, returns (params, buffers)
+    as before (moments go stale; kept for ablation/legacy callers).
+
+    ``id_counts`` (per-feature histograms, e.g. ``IdFrequencyTracker.counts``)
+    draws each table's k-means sample from the OBSERVED id distribution —
+    the paper's epoch-boundary sampling.  Without it the sample is uniform
+    over the vocab, which on Zipf data lets the never-trained tail dominate
+    the centroids.
+    """
+    from repro.core.cce import CCE
+    from repro.optim.remap import remap_opt_state
+    from repro.train.transition import transition_table
+
+    policy = policy or cfg.emb_opt_policy
+    if chunk_size is None:
+        chunk_size = cfg.emb_cluster_chunk or None
     new_p, new_b = list(params["emb"]), list(buffers["emb"])
+    updates = {}  # table index -> moment-update fn (shared across slots)
     for i in range(cfg.n_sparse):
         t = cfg.table(i)
         if isinstance(t, CCE):
-            new_p[i], new_b[i] = t.cluster(
-                jax.random.fold_in(key, i), params["emb"][i], buffers["emb"][i]
+            new_p[i], new_b[i], updates[i] = transition_table(
+                t, jax.random.fold_in(key, i),
+                params["emb"][i], buffers["emb"][i],
+                counts=id_counts[i] if id_counts is not None else None,
+                policy=policy, chunk_size=chunk_size, use_kernel=use_kernel,
+                max_points_per_centroid=max_points_per_centroid,
             )
-    return dict(params, emb=new_p), dict(buffers, emb=new_b)
+    new_params, new_buffers = dict(params, emb=new_p), dict(buffers, emb=new_b)
+    if opt is None:
+        return new_params, new_buffers
+
+    def update_moments(moments, _slot):
+        emb = list(moments["emb"])
+        for i, fn in updates.items():
+            emb[i] = fn(emb[i])
+        return dict(moments, emb=emb)
+
+    return new_params, new_buffers, remap_opt_state(
+        opt, update_moments, policy=policy
+    )

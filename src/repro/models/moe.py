@@ -19,6 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.config import ModelConfig
 from repro.models.layers import truncated_normal, _shard
 
@@ -237,7 +238,7 @@ def apply_moe_sort_sm(p, cfg: ModelConfig, x, *, group_size: int = DEFAULT_GROUP
         out = jax.vmap(combine_one)(part, slot, keep, gate, tok)  # (G/n, g, d)
         return jax.lax.psum(out.astype(jnp.float32), tp).astype(out.dtype)
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         ffn_combine,
         mesh=mesh,
         in_specs=(P(ep), P(ep), P(ep), P(ep), P(ep), P(ep, None, tp),

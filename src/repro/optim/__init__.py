@@ -6,6 +6,10 @@ from repro.optim.optimizers import (  # noqa: F401
     cosine_schedule,
     zero1_specs,
 )
+from repro.optim.remap import (  # noqa: F401
+    remap_opt_state,
+    zeros_like_moments,
+)
 from repro.optim.compression import (  # noqa: F401
     int8_compress,
     int8_decompress,

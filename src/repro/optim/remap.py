@@ -1,0 +1,65 @@
+"""Optimizer-state handling for the CCE clustering transition.
+
+``CCE.cluster`` rewrites a table's rows (centroids into the main table,
+zeros into the helper) and its pointer array, but the momentum / Adam
+moments of those rows still describe the OLD rows.  Applying them
+unchanged is the dynamic-reassignment failure mode CAFE (Zhang et al.,
+2023) warns about — stale second moments throttle the effective step size
+of freshly-merged rows arbitrarily — and the reason Shi et al. (2020)
+keep compositional tables optimizer-stable.  ``remap_opt_state`` threads
+a moment transform through the optimizer-state tree, policy-selected:
+
+  * ``"remap"`` — per-row moments follow the cluster assignments (mean of
+    the merged rows' moments, zeros for the fresh helper table — see
+    ``CCE.remap_moments``), the moment-space analog of setting the main
+    table to the centroids.
+  * ``"reset"`` — zero the transitioned tables' moments (fresh start).
+  * ``"keep"`` — leave the state untouched (the pre-fix behavior, kept
+    for ablation).
+
+Only per-row moment slots are touched; scalar slots (the Adam step count
+``t``) pass through so bias correction stays continuous across the
+transition and checkpoint resume stays restart-exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+#: Per-row moment slots of the optimizers in this repo
+#: (sgd-momentum: {"m"}; adamw: {"m", "v"}).
+MOMENT_KEYS = ("m", "v")
+
+POLICIES = ("remap", "reset", "keep")
+
+
+def remap_opt_state(
+    opt: Pytree,
+    update_fn: Callable[[Pytree, str], Pytree],
+    *,
+    policy: str = "remap",
+    moment_keys: tuple[str, ...] = MOMENT_KEYS,
+) -> Pytree:
+    """Apply ``update_fn(moment_tree, slot_name)`` to each per-parameter
+    moment tree in an optimizer state.  ``update_fn`` receives the full
+    moment tree (same structure as params) and replaces only the subtrees
+    belonging to transitioned tables — non-embedding moments flow through
+    untouched.  Plain-SGD state ({}) and ``policy="keep"`` are no-ops."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown transition policy {policy!r}; want one of {POLICIES}")
+    if opt is None or policy == "keep" or not opt:
+        return opt
+    new = dict(opt)
+    for slot in moment_keys:
+        if slot in new:
+            new[slot] = update_fn(new[slot], slot)
+    return new
+
+
+def zeros_like_moments(moments: Pytree) -> Pytree:
+    """The ``"reset"`` policy for one table's moment subtree."""
+    return jax.tree.map(jnp.zeros_like, moments)

@@ -1,0 +1,93 @@
+"""Deterministic mini-`hypothesis`, used when the real package is absent.
+
+pyproject.toml declares `hypothesis` as a test dependency, but hermetic
+containers (and minimal CI lanes) may not have it installed — and the
+property tests should still COLLECT and RUN there rather than error the
+whole suite.  `tests/conftest.py` installs this module into
+``sys.modules["hypothesis"]`` as a fallback.
+
+Scope: exactly the API surface this repo's tests use —
+``@given`` (positional or keyword strategies), ``@settings(max_examples=,
+deadline=)``, ``strategies.integers`` and ``strategies.sampled_from``.
+Each property runs on a fixed-seed sample that always includes the
+all-min and all-max corner, then uniform draws — strictly weaker than
+hypothesis's adaptive search + shrinking, strictly stronger than skipping
+the tests.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+_ATTR = "_fallback_max_examples"
+
+
+class SearchStrategy:
+    def __init__(self, draw, lo=None, hi=None):
+        self._draw = draw
+        self.lo = lo  # corner values (None: no meaningful corner)
+        self.hi = hi
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value), min_value, max_value
+    )
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))], seq[0], seq[-1])
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            setattr(fn, _ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*fixture_args, **fixture_kw):
+            n = getattr(runner, _ATTR, getattr(fn, _ATTR, DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for i in range(n):
+                if i == 0:  # corners first: the bugs property tests exist for
+                    args = [s.lo for s in arg_strategies]
+                    kw = {k: s.lo for k, s in kw_strategies.items()}
+                elif i == 1:
+                    args = [s.hi for s in arg_strategies]
+                    kw = {k: s.hi for k, s in kw_strategies.items()}
+                else:
+                    args = [s.example(rng) for s in arg_strategies]
+                    kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*fixture_args, *args, **fixture_kw, **kw)
+
+        # pytest must not see the strategy-bound parameters as fixtures:
+        # like hypothesis, expose only the leftovers (pytest fixtures).
+        # Positional strategies bind the RIGHTMOST params, kw by name.
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        runner.__signature__ = inspect.Signature(params)
+        del runner.__wrapped__  # or inspect ignores __signature__
+        return runner
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.SearchStrategy = SearchStrategy

@@ -1,3 +1,4 @@
+from repro.train.freq import IdFrequencyTracker  # noqa: F401
 from repro.train.loop import (  # noqa: F401
     TrainState,
     make_train_step,

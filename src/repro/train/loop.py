@@ -5,10 +5,13 @@ Pieces:
     accumulation (lax.scan), optional int8 gradient compression with error
     feedback, global-norm clipping, optimizer update.  Pure function of
     (state, batch) so it lowers/compiles for any mesh.
-  * buffer split — embedding-table buffers mix jnp arrays (CCE pointer
-    tables) with static python ints (universal-hash coefficients).  The
-    arrays ride the train state (they change on cluster()); the ints are
-    closed over statically.
+  * buffer split — embedding-table buffers mix arrays with static python
+    ints.  Arrays ride the train state; ints are closed over statically.
+    EVERYTHING the clustering transition rewrites (CCE ptr/hs/epoch) is
+    therefore an array — a static leaf would leave the jitted step
+    training against pre-transition hash functions.  Only buffers of the
+    non-transitioning tables (embeddings.py hash coefficients) stay
+    static.
   * ``Trainer`` — host-side orchestration: data feed, CCE clustering
     callback every ``cluster_every`` steps (the paper's Algorithm 3 line
     10 interleaving), async checkpointing, straggler monitor, failure
@@ -17,6 +20,7 @@ Pieces:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable, NamedTuple
 
@@ -206,13 +210,46 @@ class FailureInjector:
             raise RuntimeError(f"injected failure at step {step}")
 
 
+def _cluster_fn_takes_opt(fn) -> bool:
+    """The transition callback comes in two arities:
+    ``(key, params, buffers)`` (legacy) and
+    ``(key, params, buffers, opt) -> (params, buffers, opt)`` — the
+    optimizer-state-aware form that remaps/resets per-row moments through
+    the new cluster assignments (see ``repro.optim.remap``).
+
+    Detection: an explicit ``fn.cluster_takes_opt`` attribute wins (set it
+    on wrapped/partial callables where the signature lies); otherwise the
+    4-arg form requires a parameter literally named ``opt``, or four
+    REQUIRED positional parameters — a legacy callback with trailing
+    optional extras (``def f(key, p, b, verbose=False)``) stays legacy."""
+    explicit = getattr(fn, "cluster_takes_opt", None)
+    if explicit is not None:
+        return bool(explicit)
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    ps = [
+        p for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+    ]
+    # opt is passed POSITIONALLY, so only positional kinds count — a
+    # keyword-only `*, opt=None` stays on the legacy 3-arg call
+    if any(p.name == "opt" for p in ps):
+        return True
+    return len([p for p in ps if p.default is p.empty]) >= 4
+
+
 class Trainer:
     """data -> step -> [cluster] -> [checkpoint], restart-exact.
 
-    ``cluster_fn(key, params, buffers) -> (params, buffers)`` is the CCE
-    transition (Alg. 3); it runs OUTSIDE the jitted step every
-    ``cluster_every`` steps, like the paper's per-epoch clustering.
-    """
+    ``cluster_fn`` is the CCE transition (Alg. 3); it runs OUTSIDE the
+    jitted step every ``cluster_every`` steps, like the paper's per-epoch
+    clustering.  The 4-arg form additionally receives (and returns) the
+    optimizer state so per-row moments survive the transition; both the
+    params and the remapped optimizer state land back in ``TrainState``,
+    which is what the checkpoint saves — resume after a transition is
+    exact."""
 
     def __init__(
         self,
@@ -227,6 +264,7 @@ class Trainer:
         cluster_fn=None,
         cluster_every: int = 0,
         cluster_max: int = 0,
+        id_tracker=None,
         accum: int = 1,
         monitor: StragglerMonitor | None = None,
         failures: FailureInjector | None = None,
@@ -239,8 +277,12 @@ class Trainer:
         self.ckpt = CheckpointManager(ckpt_dir, keep_last) if ckpt_dir else None
         self.ckpt_every = ckpt_every
         self.cluster_fn = cluster_fn
+        self._cluster_takes_opt = (
+            cluster_fn is not None and _cluster_fn_takes_opt(cluster_fn)
+        )
         self.cluster_every = cluster_every
         self.cluster_max = cluster_max
+        self.id_tracker = id_tracker  # feeds the transition's k-means sample
         self.clusters_done = 0
         self.accum = accum
         self.monitor = monitor or StragglerMonitor()
@@ -261,7 +303,10 @@ class Trainer:
             step = int(self.state.step)
             if self.failures is not None:
                 self.failures.maybe_fail(step)
-            batch = self._reshape_accum(next(self.data_iter))
+            raw = next(self.data_iter)
+            if self.id_tracker is not None:
+                self.id_tracker.observe(raw)
+            batch = self._reshape_accum(raw)
             t0 = time.perf_counter()
             self.state, metrics = self.train_step(self.state, batch)
             jax.block_until_ready(self.state.params)
@@ -278,9 +323,25 @@ class Trainer:
             ):
                 key = jax.random.fold_in(jax.random.PRNGKey(self.seed), new_step)
                 buffers = merge_buffers(self.state.ebuf, self.static_buffers)
-                params, buffers = self.cluster_fn(key, self.state.params, buffers)
+                if self._cluster_takes_opt:
+                    params, buffers, opt = self.cluster_fn(
+                        key, self.state.params, buffers, self.state.opt
+                    )
+                else:
+                    params, buffers = self.cluster_fn(key, self.state.params, buffers)
+                    opt = self.state.opt
                 dyn, self.static_buffers = split_buffers(buffers)
-                self.state = self.state._replace(params=params, ebuf=dyn)
+                # int8-EF residuals are per-row state like the moments: the
+                # rewritten rows make them meaningless, and (unlike moments)
+                # zeroing them is always sound — EF only corrects future
+                # quantization, it carries no required state
+                err = (
+                    init_error_feedback(params)
+                    if self.state.err is not None else None
+                )
+                self.state = self.state._replace(
+                    params=params, ebuf=dyn, opt=opt, err=err
+                )
                 self.clusters_done += 1
 
             if self.ckpt and self.ckpt_every and new_step % self.ckpt_every == 0:
@@ -290,12 +351,60 @@ class Trainer:
         return self.history
 
     def _ckpt_tree(self):
-        return {"state": self.state}
+        # clusters_done and the id histograms ride the checkpoint so a
+        # restart cannot re-run (or skip) transitions against cluster_max,
+        # and the k-means sampling distribution resumes exactly — the
+        # transition schedule is part of the training state, not of the
+        # host process.
+        tree = {"state": self.state, "clusters_done": np.int32(self.clusters_done)}
+        if self.id_tracker is not None:
+            tree["id_counts"] = self.id_tracker.state_tree()
+        return tree
+
+    def _restore_templates(self):
+        """Candidate checkpoint layouts, most- to least-informative: the
+        current config's layout, then the layouts a differently-configured
+        writer could have produced (tracker-less: no id_counts; pre-
+        transition-subsystem: state only).  When the WRITER had a tracker
+        this Trainer doesn't, the saved id_counts leaves are absorbed via
+        a placeholder list sized from the manifest so the state still
+        restores (the histograms are dropped)."""
+        templates = [self._ckpt_tree()]
+        base = {"state": self.state, "clusters_done": np.int32(0)}
+        if self.id_tracker is not None:
+            templates.append(base)  # writer had no tracker
+        else:
+            from repro.checkpoint.store import list_checkpoints
+            import json
+            import os
+
+            ckpts = list_checkpoints(self.ckpt.directory)
+            if ckpts:
+                with open(os.path.join(ckpts[-1][1], "manifest.json")) as f:
+                    n_leaves = int(json.load(f)["n_leaves"])
+                extra = n_leaves - len(jax.tree.leaves(base))
+                if extra > 0:  # writer-side id_counts this reader drops
+                    templates.append(
+                        dict(base, id_counts=[np.zeros(0)] * extra)
+                    )
+        templates.append({"state": self.state})  # pre-transition layout
+        return templates
 
     def restore_latest(self):
         self.ckpt.wait()  # an async save may still be in flight post-crash
-        step, tree, _ = load_checkpoint(
-            self.ckpt.directory, template=self._ckpt_tree()
-        )
+        err: Exception | None = None
+        for template in self._restore_templates():
+            try:
+                step, tree, _ = load_checkpoint(
+                    self.ckpt.directory, template=template
+                )
+                break
+            except ValueError as e:  # leaf/structure mismatch: next layout
+                err = e
+        else:
+            raise err  # no candidate layout matched
         self.state = tree["state"]
+        self.clusters_done = int(tree.get("clusters_done", 0))
+        if self.id_tracker is not None and "id_counts" in tree:
+            self.id_tracker.load_state_tree(tree["id_counts"])
         return step

@@ -1,0 +1,68 @@
+"""One CCE table's complete clustering transition, shared by every model.
+
+``dlrm.cluster_tables`` (26 tables, per-table configs) and the LM
+launcher (one vocab table) need identical plumbing around
+``CCE.cluster``: derive a sampling seed from the transition key, draw the
+k-means sample from observed id frequencies when a histogram exists,
+cluster, and build the moment-update function that ``remap_opt_state``
+applies to each optimizer slot (computing the per-cluster counts once so
+Adam's m AND v reuse them).  Centralizing it here keeps the two paths
+from drifting — policy and chunking knobs reach both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.remap import zeros_like_moments
+from repro.train.freq import sample_from_counts
+
+
+def transition_table(
+    table,
+    key,
+    params,
+    buffers,
+    *,
+    counts=None,
+    policy: str = "remap",
+    chunk_size: int | None = None,
+    use_kernel: bool | None = None,
+    max_points_per_centroid: int = 256,
+):
+    """Returns ``(new_params, new_buffers, update_moments)`` for one CCE
+    table.  ``counts`` is the table's observed id histogram (frequency-
+    weighted k-means sample — the paper's epoch-boundary distribution);
+    None or all-zero falls back to uniform subsampling.
+    ``update_moments(moment_subtree)`` remaps/resets/keeps that table's
+    per-row optimizer moments per ``policy``."""
+    sample_ids = None
+    if counts is not None:
+        seed = int(
+            jax.random.randint(jax.random.fold_in(key, 10_007), (), 0, 2**31 - 1)
+        )
+        drawn = sample_from_counts(
+            counts, min(table.d1, max_points_per_centroid * table.k), seed
+        )
+        if drawn is not None:
+            sample_ids = jnp.asarray(drawn)
+    new_params, new_buffers = table.cluster(
+        key, params, buffers,
+        sample_ids=sample_ids, chunk_size=chunk_size, use_kernel=use_kernel,
+        max_points_per_centroid=max_points_per_centroid,
+    )
+    cluster_counts = (
+        table.assignment_counts(new_buffers) if policy == "remap" else None
+    )
+
+    def update_moments(moments):
+        if policy == "keep":
+            return moments
+        if policy == "reset":
+            return zeros_like_moments(moments)
+        return table.remap_moments(
+            moments, buffers, new_buffers,
+            chunk_size=chunk_size, counts=cluster_counts,
+        )
+
+    return new_params, new_buffers, update_moments

@@ -1,4 +1,5 @@
 import os
+import sys
 
 # smoke tests run on the single real CPU device — the 512-device forcing
 # belongs ONLY to launch/dryrun.py (see the brief); make sure it never leaks
@@ -6,6 +7,16 @@ import os
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
     "tests must see 1 device; unset XLA_FLAGS"
 )
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # property tests prefer real hypothesis (declared in pyproject [test])
+    import hypothesis  # noqa: F401
+except ImportError:  # hermetic container: deterministic fallback shim
+    from repro.testing import hypothesis_fallback
+
+    sys.modules["hypothesis"] = hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = hypothesis_fallback.strategies
 
 import jax
 

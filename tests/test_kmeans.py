@@ -46,7 +46,7 @@ def test_distributed_kmeans_matches_serial_single_shard():
     """On a 1-device axis the distributed algorithm IS the serial one."""
     x, _ = _blobs(jax.random.PRNGKey(6))
     mesh = jax.make_mesh((1,), ("data",))
-    from jax import shard_map
+    from repro.compat import shard_map
 
     def run(xs):
         c, a = km.distributed_kmeans(jax.random.PRNGKey(7), xs, 5, "data", niter=20)

@@ -18,12 +18,12 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
-from repro import configs
+from repro import compat, configs
 from repro.launch import steps, hlo_cost
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 out = {}
-with jax.sharding.set_mesh(mesh):
+with compat.set_mesh(mesh):
     cfg = configs.get("qwen2-1.5b", n_layers=2, d_model=512, n_heads=4,
                       n_kv_heads=2, head_dim=128, d_ff=1024, vocab=4096,
                       emb_budget=4096*512//8, train_microbatch=2)

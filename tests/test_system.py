@@ -15,6 +15,7 @@ from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
 from repro.optim import sgd
+from repro.train.freq import IdFrequencyTracker
 from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
 
 
@@ -33,14 +34,21 @@ def _train(emb_method: str, steps: int = 120, cap: int = 256, seed: int = 0,
     data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed)
 
     cluster_fn = None
+    tracker = None
     if emb_method == "cce" and cluster_every:
-        def cluster_fn(key, params, buffers):
-            return dlrm.cluster_tables(key, params, buffers, cfg)
+        # the transition's k-means samples from the OBSERVED id
+        # distribution (the paper's epoch-boundary sample), and the
+        # optimizer moments ride through the new assignments
+        tracker = IdFrequencyTracker(cfg.vocab_sizes)
+
+        def cluster_fn(key, params, buffers, opt):
+            return dlrm.cluster_tables(key, params, buffers, cfg, opt,
+                                       id_counts=tracker.counts)
 
     tr = Trainer(jax.jit(step, donate_argnums=(0,)), state,
                  static, clickstream_batches(data_cfg, 64),
                  cluster_fn=cluster_fn, cluster_every=cluster_every,
-                 cluster_max=3, seed=seed)
+                 cluster_max=3, id_tracker=tracker, seed=seed)
     tr.run(steps)
     # eval on held-out stream (host_id=1)
     test_iter = clickstream_batches(data_cfg, 512, host_id=1, n_hosts=2)

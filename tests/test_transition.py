@@ -1,0 +1,297 @@
+"""The clustering-transition subsystem (Alg. 3 as rebuilt in this repo):
+
+* optimizer-moment remap/reset across ``cluster()`` — no stale-moment
+  leakage through the 4-arg Trainer protocol,
+* single-pass full-vocab assignment — chunked bit-matches unchunked, and
+  exactly ONE full-vocab materialization per transition,
+* the Pallas ``kmeans_assign`` kernel route (interpret mode on CPU)
+  matches the jnp path,
+* the shard_map'd distributed transition reproduces the serial one on a
+  1-device axis,
+* restart-exact resume across a transition (params AND remapped moments).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import dlrm_criteo
+from repro.core.cce import CCE
+from repro.data import ClickstreamConfig, clickstream_batches
+from repro.models import dlrm
+from repro.optim import sgd
+from repro.optim.remap import remap_opt_state
+from repro.train.loop import (
+    FailureInjector,
+    Trainer,
+    init_state,
+    make_train_step,
+    split_buffers,
+)
+
+
+@pytest.fixture(scope="module")
+def cce_state():
+    # d1 > 256*k so the k-means sample is a strict subset of the vocab and
+    # the full-vocab pass is distinguishable from the sample pass
+    cce = CCE(d1=3000, d2=16, k=8, c=4, seed_salt=3)
+    params, buffers = cce.init(jax.random.PRNGKey(0))
+    return cce, params, buffers
+
+
+# --- single-pass, chunked, kernel-backed assignment --------------------------
+
+
+def test_chunked_assignment_bitmatches_unchunked(cce_state):
+    cce, params, buffers = cce_state
+    cents = jax.random.normal(jax.random.PRNGKey(1), (cce.c, cce.k, cce.dsub))
+    a_full = cce.assign_all(params, buffers, cents, use_kernel=False)
+    a_chunk = cce.assign_all(params, buffers, cents, chunk_size=97, use_kernel=False)
+    assert a_full.shape == (cce.c, cce.d1)
+    np.testing.assert_array_equal(np.asarray(a_full), np.asarray(a_chunk))
+
+
+def test_cluster_is_single_full_vocab_pass(monkeypatch, cce_state):
+    cce, params, buffers = cce_state
+    calls = []
+    orig = CCE.materialize
+
+    def spy(self, p, b, ids):
+        calls.append(int(ids.shape[0]))
+        return orig(self, p, b, ids)
+
+    monkeypatch.setattr(CCE, "materialize", spy)
+    cce.cluster(jax.random.PRNGKey(3), params, buffers)
+    assert sum(1 for n in calls if n == cce.d1) == 1, calls
+    # chunked: the vocab is streamed, (c, d1, dsub) never materializes
+    calls.clear()
+    cce.cluster(jax.random.PRNGKey(3), params, buffers, chunk_size=500)
+    assert max(calls) < cce.d1 and sum(n for n in calls if n <= 500) == cce.d1
+
+
+def test_cluster_kernel_path_matches_jnp(cce_state):
+    cce, params, buffers = cce_state
+    p_j, b_j = cce.cluster(jax.random.PRNGKey(2), params, buffers, use_kernel=False)
+    p_k, b_k = cce.cluster(jax.random.PRNGKey(2), params, buffers, use_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(p_j["tables"]), np.asarray(p_k["tables"]), rtol=1e-6
+    )
+    agree = (np.asarray(b_j["ptr"]) == np.asarray(b_k["ptr"])).mean()
+    assert agree > 0.99  # float-order ties may flip the rare equidistant row
+
+
+def test_cluster_sharded_single_device_matches_serial(cce_state):
+    cce, params, buffers = cce_state
+    mesh = jax.make_mesh((1,), ("data",))
+    p_s, b_s = cce.cluster_sharded(jax.random.PRNGKey(6), params, buffers, mesh)
+    p_r, b_r = cce.cluster(jax.random.PRNGKey(6), params, buffers)
+    np.testing.assert_allclose(
+        np.asarray(p_s["tables"]), np.asarray(p_r["tables"]), rtol=1e-5, atol=1e-6
+    )
+    agree = (np.asarray(b_s["ptr"]) == np.asarray(b_r["ptr"])).mean()
+    assert agree > 0.99
+    np.testing.assert_array_equal(np.asarray(b_s["hs"]), np.asarray(b_r["hs"]))
+
+
+# --- moment remap ------------------------------------------------------------
+
+
+def test_remap_moments_is_cluster_mean(cce_state):
+    cce, params, buffers = cce_state
+    moments = {
+        "tables": jax.random.normal(jax.random.PRNGKey(4), params["tables"].shape)
+    }
+    _, b2 = cce.cluster(jax.random.PRNGKey(5), params, buffers)
+    rm = cce.remap_moments(moments, buffers, b2)
+    mt = np.asarray(rm["tables"])
+    assert float(np.abs(mt[:, 1]).max()) == 0.0  # fresh helper: zero moments
+    # reference: materialize per-id moments under the OLD pointers, then
+    # mean per NEW cluster
+    per_id = np.asarray(cce.materialize(moments, buffers, jnp.arange(cce.d1)))
+    ptr = np.asarray(b2["ptr"])
+    for i in range(cce.c):
+        for j in range(cce.k):
+            sel = per_id[i][ptr[i] == j]
+            want = sel.mean(0) if len(sel) else np.zeros(cce.dsub, np.float32)
+            np.testing.assert_allclose(mt[i, 0, j], want, rtol=1e-5, atol=1e-6)
+    # streaming the remap changes nothing (up to f32 accumulation order)
+    rm2 = cce.remap_moments(moments, buffers, b2, chunk_size=113)
+    np.testing.assert_allclose(np.asarray(rm2["tables"]), mt, rtol=1e-4, atol=1e-5)
+
+
+def test_remap_opt_state_policies():
+    opt = {"m": {"w": jnp.ones(3)}, "t": jnp.zeros((), jnp.int32) + 5}
+    out = remap_opt_state(opt, lambda mom, slot: jax.tree.map(lambda x: 2 * x, mom))
+    assert float(out["m"]["w"][0]) == 2.0
+    assert int(out["t"]) == 5  # scalar slots untouched: bias correction continuous
+    assert remap_opt_state(opt, None, policy="keep") is opt
+    assert remap_opt_state({}, None) == {}  # plain SGD
+    with pytest.raises(ValueError):
+        remap_opt_state(opt, None, policy="bogus")
+
+
+def test_cluster_tables_remaps_and_resets():
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    opt = jax.tree.map(
+        lambda x: jnp.full_like(x, 0.5), sgd(momentum=0.9).init(params)
+    )
+    p2, b2, opt2 = dlrm.cluster_tables(
+        jax.random.PRNGKey(1), params, buffers, cfg, opt
+    )
+    # non-embedding moments flow through untouched
+    np.testing.assert_array_equal(
+        np.asarray(opt2["m"]["bottom"][0]["w"]),
+        np.asarray(opt["m"]["bottom"][0]["w"]),
+    )
+    for i in range(cfg.n_sparse):
+        if isinstance(cfg.table(i), CCE):
+            m = np.asarray(opt2["m"]["emb"][i]["tables"])
+            assert float(np.abs(m[:, 1]).max()) == 0.0  # helper slab zeroed
+            # per-id moment is 0.5 (main) + 0.5 (helper) = 1.0 everywhere, so
+            # every non-empty cluster's remapped moment is exactly 1.0
+            ptr = np.asarray(b2["emb"][i]["ptr"])
+            for col in range(ptr.shape[0]):
+                nonempty = np.unique(ptr[col])
+                np.testing.assert_allclose(m[col, 0, nonempty], 1.0, rtol=1e-6)
+    _, _, opt3 = dlrm.cluster_tables(
+        jax.random.PRNGKey(1), params, buffers, cfg, opt, policy="reset"
+    )
+    for i in range(cfg.n_sparse):
+        if isinstance(cfg.table(i), CCE):
+            assert float(np.abs(np.asarray(opt3["m"]["emb"][i]["tables"])).max()) == 0.0
+
+
+# --- frequency-weighted k-means sampling -------------------------------------
+
+
+def test_id_frequency_tracker():
+    from repro.train.freq import IdFrequencyTracker
+
+    tr = IdFrequencyTracker((10, 5))
+    assert tr.sample_ids(0, 0, 8) is None  # nothing observed: uniform fallback
+    tr.observe({"sparse": np.array([[1, 2], [1, 3], [7, 2]])})
+    tr.observe({"sparse": np.array([[1, 2]])})
+    assert tr.counts[0][1] == 3 and tr.counts[0][7] == 1
+    s = tr.sample_ids(42, 0, 1000)
+    assert set(np.unique(s)) <= {1, 7}
+    # frequency-weighted: id 1 (3 of 4 observations) dominates the sample
+    assert (s == 1).mean() > 0.5
+    np.testing.assert_array_equal(s, tr.sample_ids(42, 0, 1000))  # deterministic
+    # checkpoint round-trip
+    tr2 = IdFrequencyTracker((10, 5))
+    tr2.load_state_tree(tr.state_tree())
+    np.testing.assert_array_equal(tr2.counts[0], tr.counts[0])
+
+
+# --- the Trainer protocol ----------------------------------------------------
+
+
+def _setup(seed=0, cap=512):
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=cap)
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed), 32
+    )
+    return cfg, step, state, static, data
+
+
+def test_cce_buffers_are_fully_dynamic():
+    """The transition rewrites ptr, hs AND epoch; all three must ride the
+    dynamic ebuf through the jitted step — a static (python-int) leaf would
+    leave the step training against pre-transition hash functions (the
+    seed's silent regression)."""
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    _, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    _, (treedef, static_items) = split_buffers(buffers)
+    assert static_items == (), static_items
+
+
+def test_trainer_threads_opt_through_transition():
+    cfg, step, state, static, data = _setup()
+
+    def cluster_fn(key, p, b, opt):
+        return dlrm.cluster_tables(key, p, b, cfg, opt)
+
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static, data,
+                 cluster_fn=cluster_fn, cluster_every=10, cluster_max=1)
+    tr.run(10)  # the transition fires after the final step
+    assert tr.clusters_done == 1
+    for i in range(cfg.n_sparse):
+        if isinstance(cfg.table(i), CCE):
+            m = np.asarray(tr.state.opt["m"]["emb"][i]["tables"])
+            assert float(np.abs(m[:, 1]).max()) == 0.0  # no stale helper moments
+
+
+def test_restart_exact_across_transition(tmp_path):
+    """Crash AFTER a transition, restore from the pre-transition
+    checkpoint, replay — the transition (clustering, fresh hashes, moment
+    remap) re-runs deterministically and the final state is bitwise equal
+    to the uninterrupted run."""
+
+    from repro.train.freq import IdFrequencyTracker
+
+    def make(cfg, tracker):
+        def cluster_fn(key, p, b, opt):
+            return dlrm.cluster_tables(key, p, b, cfg, opt,
+                                       id_counts=tracker.counts)
+
+        return dict(cluster_fn=cluster_fn, cluster_every=6, cluster_max=2,
+                    id_tracker=tracker, seed=1)
+
+    def run(fail: bool):
+        cfg, step, state, static, data = _setup(seed=1)
+        tracker = IdFrequencyTracker(cfg.vocab_sizes)
+        tr = Trainer(
+            jax.jit(step, donate_argnums=(0,)), state, static, data,
+            ckpt_dir=str(tmp_path / ("a" if fail else "b")), ckpt_every=5,
+            failures=FailureInjector((8,)) if fail else None,
+            **make(cfg, tracker),
+        )
+        if fail:
+            with pytest.raises(RuntimeError):
+                tr.run(12)
+            cfg2, step2, _, static2, _ = _setup(seed=1)
+            tracker2 = IdFrequencyTracker(cfg2.vocab_sizes)
+            tr2 = Trainer(
+                jax.jit(step2, donate_argnums=(0,)), tr.state, static2,
+                clickstream_batches(
+                    ClickstreamConfig(vocab_sizes=cfg2.vocab_sizes, seed=1),
+                    32, start_step=5,
+                ),
+                ckpt_dir=str(tmp_path / "a"), **make(cfg2, tracker2),
+            )
+            restored = tr2.restore_latest()
+            assert restored == 5 and tr2.clusters_done == 0
+            assert int(tracker2.counts[0].sum()) == 5 * 32  # histograms resumed
+            tr2.run(12 - restored)
+            return tr2.state
+        tr.run(12)
+        return tr.state
+
+    s_fail = run(True)
+    s_clean = run(False)
+    for a, b in zip(jax.tree.leaves(s_fail.params), jax.tree.leaves(s_clean.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_fail.opt), jax.tree.leaves(s_clean.opt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_three_arg_cluster_fn_still_supported():
+    cfg, step, state, static, data = _setup()
+
+    def cluster_fn(key, p, b):
+        return dlrm.cluster_tables(key, p, b, cfg)
+
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static, data,
+                 cluster_fn=cluster_fn, cluster_every=5, cluster_max=1)
+    hist = tr.run(6)
+    assert tr.clusters_done == 1 and np.isfinite(hist[-1]["loss"])
