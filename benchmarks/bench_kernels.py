@@ -4,7 +4,14 @@ TPU times; the structural claim is identical results + the blocked
 structure; the roofline for the kernels is derived analytically below).
 
 Emits CSV rows: name,us_per_call,bytes_model,flops_model.
+
+``--collection`` (or a plain ``python benchmarks/bench_kernels.py`` run)
+additionally benches the EmbeddingCollection refactor end-to-end: a
+26-feature DLRM embedding step, legacy per-feature loop vs grouped
+supertables, launches-per-step counted, results written to
+``BENCH_collection.json`` (uploaded as a CI artifact).
 """
+import json
 import time
 
 import jax
@@ -82,5 +89,138 @@ def main(out=print):
     return rows
 
 
+def bench_collection(out=print, json_path="BENCH_collection.json",
+                     batch=256, reps=3):
+    """Looped vs fused DLRM embedding step (the PR's structural claim).
+
+    A 26-feature DLRM at Criteo-shaped (CI-capped) vocabs; measures the
+    embedding forward+backward and the full DLRM loss step under (a) the
+    legacy per-feature lookup loop and (b) the grouped collection —
+    fused-jnp and fused-kernel variants — and counts heavy lookup
+    launches per step (n_features -> n_groups).  On CPU the kernel runs
+    in interpret mode, so its WALL TIME is not meaningful off-TPU; the
+    launch counts and the looped-vs-fused-jnp times are.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs import dlrm_criteo
+    from repro.models import dlrm
+    from repro.models.dlrm import DLRMConfig
+
+    vocabs = tuple(min(v, 20_000) for v in dlrm_criteo.CRITEO_KAGGLE_VOCABS)
+    cfg = DLRMConfig(
+        vocab_sizes=vocabs, n_dense=13, emb_dim=16,
+        bottom_mlp=(64, 32, 16), top_mlp=(64, 1),
+        emb_method="cce", emb_param_cap=2048,
+    )
+    coll = cfg.collection
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch_tree = {
+        "dense": jnp.asarray(rng.normal(size=(batch, 13)), jnp.float32),
+        "sparse": jnp.asarray(
+            np.stack([rng.integers(0, v, batch) for v in vocabs], axis=1),
+            jnp.int32,
+        ),
+        "label": jnp.asarray(rng.integers(0, 2, batch), jnp.float32),
+    }
+    sparse = batch_tree["sparse"]
+    co = jax.random.normal(jax.random.PRNGKey(1), (batch, cfg.n_sparse, 16))
+    per_p = jax.tree.map(jnp.asarray, coll.unstack_params(params["emb"]))
+    per_b = coll.unstack_buffers(buffers["emb"])
+
+    def emb_looped(pp):  # the pre-collection hot loop: 26 lookups
+        outv = jnp.stack(
+            [
+                coll.tables[i].lookup(pp[i], per_b[i], sparse[:, i])
+                for i in range(coll.n_features)
+            ],
+            axis=1,
+        )
+        return jnp.sum(outv * co)
+
+    def emb_fused(ep, use_kernel):
+        outv = coll.lookup_all(ep, buffers["emb"], sparse, use_kernel=use_kernel)
+        return jnp.sum(outv * co)
+
+    t_loop = timeit(jax.jit(jax.grad(emb_looped)), per_p, reps=reps)
+    t_jnp = timeit(
+        jax.jit(jax.grad(lambda ep: emb_fused(ep, False))), params["emb"], reps=reps
+    )
+    t_ker = timeit(
+        jax.jit(jax.grad(lambda ep: emb_fused(ep, True))), params["emb"], reps=reps
+    )
+
+    def e2e_fused(p):
+        return dlrm.bce_loss(
+            p, buffers, dataclasses.replace(cfg, emb_use_kernel=False), batch_tree
+        )
+
+    def e2e_looped(p):
+        # the pre-collection dlrm.forward: per-feature lookups spliced into
+        # the same interaction + MLP stack
+        x0 = batch_tree["dense"]
+        for i, layer in enumerate(p["bottom"]):
+            x0 = x0 @ layer["w"] + layer["b"]
+            x0 = jax.nn.relu(x0)
+        vecs = [x0] + [
+            coll.tables[i].lookup(p["emb"][i], per_b[i], sparse[:, i])
+            for i in range(coll.n_features)
+        ]
+        V = jnp.stack(vecs, axis=1)
+        inter = jnp.einsum("bie,bje->bij", V, V)
+        iu, ju = jnp.triu_indices(V.shape[1], k=1)
+        feats = jnp.concatenate([x0, inter[:, iu, ju]], axis=-1)
+        x = feats
+        for i, layer in enumerate(p["top"]):
+            x = x @ layer["w"] + layer["b"]
+            if i < len(p["top"]) - 1:
+                x = jax.nn.relu(x)
+        lg = x[:, 0]
+        y = batch_tree["label"]
+        return jnp.mean(
+            jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg)))
+        )
+
+    t_e2e_fused = timeit(jax.jit(jax.grad(e2e_fused)), params, reps=reps)
+    params_loop = dict(params, emb=per_p)
+    t_e2e_loop = timeit(jax.jit(jax.grad(e2e_looped)), params_loop, reps=reps)
+
+    result = {
+        "backend": jax.default_backend(),
+        "note": "CPU kernel times are interpret-mode (validation), not TPU",
+        "batch": batch,
+        "n_features": coll.n_features,
+        "n_groups": coll.n_groups,
+        "launches_per_step": {"looped": coll.n_features,
+                              "fused": coll.n_lookup_launches},
+        "groups": [
+            {"kind": g.kind, "features": list(g.features)} for g in coll.groups
+        ],
+        "emb_fwd_bwd_us": {"looped": t_loop, "fused_jnp": t_jnp,
+                           "fused_kernel_interp": t_ker},
+        "e2e_dlrm_step_us": {"looped": t_e2e_loop, "fused_jnp": t_e2e_fused},
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out("collection: " + json.dumps(result["launches_per_step"]))
+    out(f"emb fwd+bwd us: looped={t_loop:.0f} fused_jnp={t_jnp:.0f} "
+        f"fused_kernel_interp={t_ker:.0f}")
+    out(f"e2e dlrm step us: looped={t_e2e_loop:.0f} fused_jnp={t_e2e_fused:.0f}")
+    out(f"wrote {json_path}")
+    return result
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--collection", action="store_true",
+                    help="only the looped-vs-fused collection bench")
+    ap.add_argument("--json", default="BENCH_collection.json")
+    args = ap.parse_args()
+    if not args.collection:
+        main()
+    bench_collection(json_path=args.json)

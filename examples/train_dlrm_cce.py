@@ -59,6 +59,7 @@ def main():
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         cluster_fn=cluster_fn, cluster_every=args.steps // 4, cluster_max=3,
         id_tracker=tracker, failures=FailureInjector((fail_step,)),
+        migrations=dlrm.checkpoint_migrations(cfg),
     )
 
     try:

@@ -94,11 +94,24 @@ def list_checkpoints(directory: str) -> list[tuple[int, str]]:
     return sorted(out)
 
 
-def load_checkpoint(directory: str, *, step: int | None = None, template: Pytree | None = None):
+def load_checkpoint(directory: str, *, step: int | None = None,
+                    template: Pytree | None = None, migrations=()):
     """Load the latest (or given-step) committed checkpoint.
 
     Returns (step, tree, extra).  If ``template`` is given, the tree
     structure is taken from it (robust to treedef serialization versions).
+
+    ``migrations`` is an ordered sequence of ``(template, convert)``
+    layout candidates for checkpoints written by older code: each template
+    is tried in turn (after ``template``, if given) until one matches the
+    stored leaves, and its ``convert`` — None for identity — maps the
+    restored tree to the current layout.  A template matches when the leaf
+    COUNT and every leaf SHAPE agree — two layouts of the same state can
+    coincide in leaf count (a per-feature emb list vs. a stacked slab plus
+    histogram placeholders), and shape is what tells them apart.  A
+    zero-size template leaf is a wildcard: it absorbs a stored leaf of any
+    shape (the Trainer uses this to drop a departed writer's id
+    histograms).
     """
     ckpts = list_checkpoints(directory)
     if not ckpts:
@@ -116,13 +129,33 @@ def load_checkpoint(directory: str, *, step: int | None = None, template: Pytree
         np.load(os.path.join(path, f"arr_{i}.npy"))
         for i in range(manifest["n_leaves"])
     ]
-    if template is not None:
-        treedef = jax.tree.structure(template)
-    else:
-        treedef = jax.tree_util.tree_structure_from_proto  # pragma: no cover
+    candidates = ([(template, None)] if template is not None else []) + list(
+        migrations
+    )
+    if not candidates:
         raise ValueError("pass template= to reconstruct the tree structure")
-    tree = jax.tree.unflatten(treedef, leaves)
-    return manifest["step"], tree, manifest.get("extra", {})
+    err: Exception | None = None
+    for tmpl, convert in candidates:
+        t_leaves, treedef = jax.tree.flatten(tmpl)
+        if len(t_leaves) != len(leaves):
+            err = err or ValueError(
+                f"leaf count mismatch: checkpoint has {len(leaves)}, "
+                f"template has {len(t_leaves)}"
+            )
+            continue
+        if any(
+            hasattr(t, "shape")
+            and np.size(t) > 0  # zero-size leaf: wildcard placeholder
+            and tuple(t.shape) != tuple(l.shape)
+            for t, l in zip(t_leaves, leaves)
+        ):
+            err = err or ValueError("leaf shapes do not match this layout template")
+            continue
+        tree = jax.tree.unflatten(treedef, leaves)
+        if convert is not None:
+            tree = convert(tree)
+        return manifest["step"], tree, manifest.get("extra", {})
+    raise err  # no candidate layout matched
 
 
 def reshard_restore(tree: Pytree, shardings: Pytree) -> Pytree:

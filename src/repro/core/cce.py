@@ -72,6 +72,63 @@ class CCE:
     def n_params(self) -> int:
         return 2 * self.k * self.d2
 
+    # --- collection grouping (DESIGN.md §3) ------------------------------
+
+    def group_signature(self):
+        """Tables with equal signatures fuse into one supertable and share
+        a single ``kops.cce_lookup`` launch per step.  ``k`` is NOT part of
+        the signature: the supertable pads ragged codebooks to the group
+        max (``kops.pad_stack_tables``), so same-(c, dsub) tables fuse even
+        when per-table budgets differ."""
+        return ("cce", self.c, self.dsub, str(jnp.dtype(self.dtype)))
+
+    @staticmethod
+    def stack_many(tables, params_seq):
+        """Per-feature {"tables": (c, 2, k_f, dsub)} -> one supertable
+        {"tables": (F·c, 2, max k_f, dsub)} (zero-padded codebook axis)."""
+        k_pad = max(t.k for t in tables)
+        return {
+            "tables": kops.pad_stack_tables(
+                [p["tables"] for p in params_seq], k_pad=k_pad
+            )
+        }
+
+    @staticmethod
+    def unstack_many(tables, group_params):
+        """Inverse of ``stack_many``: slice each feature's (c, 2, k_f, dsub)
+        block back out (drops the codebook padding)."""
+        out, off = [], 0
+        for t in tables:
+            out.append({"tables": group_params["tables"][off : off + t.c, :, : t.k, :]})
+            off += t.c
+        return out
+
+    @staticmethod
+    def lookup_many(tables, group_params, buffers_seq, ids, *, use_kernel=True):
+        """Fused multi-feature lookup: ONE kernel launch for the whole group.
+
+        ``ids`` (B, F) int32, one column per feature; ``group_params`` the
+        stacked supertable; ``buffers_seq`` per-feature {ptr, hs} buffers
+        (pointer arrays stay per-feature — their vocabularies differ).
+        Returns (B, F, d2).  The per-feature row translation (learned ptr
+        gather + helper hash) is cheap int math; the 2·F·c table gathers
+        collapse into a single blocked one-hot matmul (Mosaic on TPU,
+        interpret mode on CPU).  ``use_kernel=False`` takes the vmapped
+        jnp gather path — same math, used as the numerics oracle."""
+        B, F = ids.shape
+        rows = jnp.concatenate(
+            [t._rows(buffers_seq[f], ids[:, f]) for f, t in enumerate(tables)],
+            axis=0,
+        )  # (F·c, B, 2)
+        if use_kernel:
+            out = kops.cce_lookup(rows, group_params["tables"])  # (B, F·c·dsub)
+            return out.reshape(B, F, -1)
+        tabs = group_params["tables"]
+        main = jax.vmap(lambda t, r: t[r])(tabs[:, 0], rows[..., 0])
+        helper = jax.vmap(lambda t, r: t[r])(tabs[:, 1], rows[..., 1])
+        pieces = main + helper  # (F·c, B, dsub)
+        return jnp.moveaxis(pieces, 0, -2).reshape(B, F, -1)
+
     # --- init -----------------------------------------------------------
 
     def init_buffers(self):
@@ -226,6 +283,7 @@ class CCE:
         buffers,
         *,
         sample_ids: jax.Array | None = None,
+        sample_weights: jax.Array | None = None,
         niter: int = 50,
         max_points_per_centroid: int = 256,
         chunk_size: int | None = None,
@@ -237,6 +295,11 @@ class CCE:
         paper §Reproducibility); assignments for the FULL vocab are then
         ONE materialization pass shared by all columns (``assign_all``) —
         the per-column recompute this replaces was O(c²·d1·dsub).
+
+        ``sample_weights`` (aligned with ``sample_ids``) runs COUNT-WEIGHTED
+        k-means: each observed id appears once, weighted by its frequency —
+        the zero-variance form of the paper's epoch-boundary sample (a
+        with-replacement draw from the same histogram converges to it).
         """
         k1, k2 = jax.random.split(jax.random.fold_in(key, buffers["epoch"]))
         if sample_ids is None:
@@ -246,7 +309,8 @@ class CCE:
         centroids = jnp.stack(
             [
                 km.kmeans(
-                    jax.random.fold_in(k2, i), sample[i], self.k, niter=niter
+                    jax.random.fold_in(k2, i), sample[i], self.k, niter=niter,
+                    weights=sample_weights,
                 ).centroids
                 for i in range(self.c)
             ]
@@ -265,19 +329,21 @@ class CCE:
         *,
         axis_name: str = "data",
         sample_ids: jax.Array | None = None,
+        sample_weights: jax.Array | None = None,
         niter: int = 50,
         max_points_per_centroid: int = 256,
         chunk_size: int | None = None,
         use_kernel: bool | None = None,
     ):
-        """Distributed transition: k-means runs data-parallel over
-        ``axis_name`` (local (sum, count) moments + psum — see
-        ``kmeans.distributed_kmeans``) so pod-scale tables cluster in place
-        without gathering the sample to one host.  Every shard ends with
-        identical centroids; the full-vocab assignment then reuses the same
-        single-pass ``assign_all``.  On a 1-device axis this reproduces
-        ``cluster()`` exactly (same key schedule, psum degenerates to
-        identity)."""
+        """Distributed transition: BOTH phases run data-parallel over
+        ``axis_name``.  The k-means phase shards the sample (local
+        (sum, count) moments + psum — see ``kmeans.distributed_kmeans``);
+        the full-vocab assignment phase shards the id range
+        (``assign_all_sharded``) and returns the complete (c, d1) pointer
+        as one global array, sharded over ids, gathered where consumed.
+        Sample weights shard with the points.  On a 1-device axis this
+        reproduces ``cluster()`` exactly (same key schedule; the
+        collectives degenerate to identity)."""
         from jax.sharding import PartitionSpec as P
 
         from repro import compat
@@ -290,8 +356,9 @@ class CCE:
         # FAISS-style subsampling tolerates by construction
         n = sample_ids.shape[0] - sample_ids.shape[0] % nsh
         sample = self.materialize(params, buffers, sample_ids[:n])  # (c, n, dsub)
+        w = None if sample_weights is None else sample_weights[:n].astype(jnp.float32)
 
-        def per_shard(sample_local):
+        def per_shard(sample_local, w_local):
             return jnp.stack(
                 [
                     km.distributed_kmeans(
@@ -300,18 +367,84 @@ class CCE:
                         self.k,
                         axis_name,
                         niter=niter,
+                        weights=None if w_local is None else w_local,
                     )[0]
                     for i in range(self.c)
                 ]
             )
 
-        centroids = compat.shard_map(
-            per_shard, mesh=mesh, in_specs=P(None, axis_name), out_specs=P()
-        )(sample)
-        new_ptr = self.assign_all(
-            params, buffers, centroids, chunk_size=chunk_size, use_kernel=use_kernel
+        if w is None:
+            centroids = compat.shard_map(
+                lambda s: per_shard(s, None), mesh=mesh,
+                in_specs=P(None, axis_name), out_specs=P(),
+            )(sample)
+        else:
+            centroids = compat.shard_map(
+                per_shard, mesh=mesh,
+                in_specs=(P(None, axis_name), P(axis_name)), out_specs=P(),
+            )(sample, w)
+        new_ptr = self.assign_all_sharded(
+            params, buffers, centroids, mesh, axis_name=axis_name,
+            chunk_size=chunk_size, use_kernel=use_kernel,
         )
         return self._finish_transition(k2, centroids, new_ptr, buffers)
+
+    def assign_all_sharded(
+        self,
+        params,
+        buffers,
+        centroids: jax.Array,
+        mesh,
+        *,
+        axis_name: str = "data",
+        chunk_size: int | None = None,
+        use_kernel: bool | None = None,
+    ) -> jax.Array:
+        """``assign_all`` with the id range sharded over ``axis_name``.
+
+        Each shard materializes and assigns d1/nsh ids (streamed in
+        ``chunk_size`` slices like the serial pass) — the full-vocab pass
+        is the transition's only O(d1) step, and it now scales with the
+        data axis instead of running replicated on every host.  The
+        per-shard (c, d1/nsh) tiles come back through
+        ``out_specs=P(None, axis)``, i.e. the returned pointer is the full
+        (c, d1) table as ONE global array sharded over the id axis — XLA
+        inserts the all-gather lazily where a consumer (the training-step
+        ptr gather, ``assignment_counts``) needs rows from other shards.
+        The tail is padded with clamped ids (assignments are computed
+        row-wise, so the padded duplicates change nothing) and sliced off
+        after the pass."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        nsh = mesh.shape[axis_name]
+        d1_pad = ((self.d1 + nsh - 1) // nsh) * nsh
+        ids = jnp.minimum(jnp.arange(d1_pad), self.d1 - 1)
+
+        def per_shard(ids_local):
+            n_local = ids_local.shape[0]
+            step = chunk_size if chunk_size and chunk_size < n_local else n_local
+            outs = []
+            for s in range(0, n_local, step):
+                emb = self.materialize(params, buffers, ids_local[s : s + step])
+                outs.append(
+                    jnp.stack(
+                        [
+                            km.assign(emb[i], centroids[i], use_kernel=use_kernel)
+                            for i in range(self.c)
+                        ]
+                    )
+                )
+            return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+        ptr = compat.shard_map(
+            per_shard, mesh=mesh, in_specs=P(axis_name),
+            out_specs=P(None, axis_name),
+        )(ids)
+        return ptr[:, : self.d1]
 
     def assignment_counts(self, buffers) -> jax.Array:
         """Per-cluster id counts (c, k) from the pointer table.  Depends
@@ -324,7 +457,7 @@ class CCE:
         )
 
     def remap_moments(self, moments, old_buffers, new_buffers, *,
-                      chunk_size=None, counts=None):
+                      chunk_size=None, counts=None, id_weights=None):
         """Carry per-row optimizer moments (momentum / Adam m, v) through a
         cluster() transition.
 
@@ -338,17 +471,35 @@ class CCE:
         ids assigned to it; the fresh helper table starts at zero moments,
         matching its zero-initialized params.  Streams the vocab in
         ``chunk_size`` slices like ``assign_all``.
+
+        ``id_weights`` (d1,) — typically the observed id histogram — makes
+        the per-cluster mean COUNT-WEIGHTED, matching the frequency-weighted
+        centroids: a cluster's moment is dominated by the ids that actually
+        trained its rows.  Clusters whose ids were never observed (zero
+        total weight) fall back to the uniform mean.
         """
         mt = jnp.asarray(moments["tables"])
         new_ptr = jnp.asarray(new_buffers["ptr"])  # (c, d1) assignments
         if counts is None:
             counts = self.assignment_counts(new_buffers)  # (c, k)
         sums = jnp.zeros((self.c, self.k, self.dsub), jnp.float32)
+        wsums = jnp.zeros_like(sums)
+        wcounts = jnp.zeros((self.c, self.k), jnp.float32)
         seg = lambda vals, idx: jax.ops.segment_sum(vals, idx, num_segments=self.k)
         for ids in self._id_chunks(chunk_size):
             per_id = self.materialize({"tables": mt}, old_buffers, ids)
-            sums = sums + jax.vmap(seg)(per_id.astype(jnp.float32), new_ptr[:, ids])
-        mean = (sums / jnp.maximum(counts[..., None], 1.0)).astype(mt.dtype)
+            per_id = per_id.astype(jnp.float32)
+            idx = new_ptr[:, ids]
+            sums = sums + jax.vmap(seg)(per_id, idx)
+            if id_weights is not None:
+                w = jnp.asarray(id_weights)[ids].astype(jnp.float32)  # (n,)
+                wsums = wsums + jax.vmap(seg)(per_id * w[None, :, None], idx)
+                wcounts = wcounts + jax.vmap(seg)(jnp.tile(w[None], (self.c, 1)), idx)
+        mean = sums / jnp.maximum(counts[..., None], 1.0)
+        if id_weights is not None:
+            wmean = wsums / jnp.maximum(wcounts[..., None], 1e-12)
+            mean = jnp.where(wcounts[..., None] > 0, wmean, mean)
+        mean = mean.astype(mt.dtype)
         return {"tables": jnp.stack([mean, jnp.zeros_like(mean)], axis=1)}
 
     # --- diagnostics (Appendix H) ----------------------------------------

@@ -1,0 +1,266 @@
+"""EmbeddingCollection — grouped supertables for multi-feature models.
+
+The paper's hot loop is ``concat_i M_i[h_i(id)] + M'_i[h'_i(id)]`` per
+categorical feature; DLRM has 26 of them.  Issuing 26 independent gathers
+per step wastes the fused one-hot-matmul kernel (``kernels/cce_lookup``)
+and launches O(n_features) ops where O(n_groups) suffice — the
+``QREmbeddingBag`` lesson from Shi et al. 2020, and the precondition CAFE
+(Zhang et al. 2023) names for adaptive per-feature compression to pay off.
+
+The collection groups a model's tables by fuse-compatibility signature
+(``table.group_signature()``) and stacks each group's parameters:
+
+  * CCE tables with equal (c, dsub, dtype) -> ONE supertable
+    (F·c, 2, max k_f, dsub) + per-feature pointer arrays; the whole group
+    is one ``kops.cce_lookup`` launch per step, forward AND backward
+    (ragged codebooks zero-padded by ``kops.pad_stack_tables`` — padded
+    rows are unreachable and get exactly-zero gradient).
+  * Full tables with equal (d2, dtype) -> ONE padded (F, max d1, d2)
+    stack; the whole group is a single gather.  Groups are sub-partitioned
+    when the d1 spread would make padding cost more than the fusion saves.
+  * Everything else (hash/ce/robe/dhe/tt and methods without a signature)
+    falls back to a per-feature loop group.
+
+State layout (the "grouped layout", DESIGN.md §3):
+
+    params["emb"]  : [group_params, ...]       one entry per group
+    buffers["emb"] : [[feat_buffers, ...], ...]  per group, per feature
+
+Buffers are NEVER stacked — pointer arrays have per-feature vocabularies
+and stay exactly as the per-feature methods wrote them, so every CCE
+method (cluster, remap_moments, materialize) applies unchanged to a
+feature's slice.  ``stack_params``/``unstack_params`` convert between the
+grouped layout and the legacy per-feature layout (used by the checkpoint
+migration: pre-collection checkpoints restore bit-exact, see
+``legacy_layout_migration``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embeddings as emb_lib
+from repro.core.cce import CCE
+
+#: Sub-partition a "full" group when padding every table to the group max
+#: would blow past this multiple of the smallest table in the bucket —
+#: bounds the padded-parameter waste at ~FULL_PAD_RATIO per bucket while a
+#: budget-capped config (all small tables) still lands in one gather.
+FULL_PAD_RATIO = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TableGroup:
+    kind: str  # "cce" | "full" | "loop"
+    features: tuple[int, ...]  # global feature indices, ascending
+    tables: tuple[Any, ...]  # the features' method objects, same order
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingCollection:
+    tables: tuple[Any, ...]
+    groups: tuple[TableGroup, ...]
+
+    # --- construction ----------------------------------------------------
+
+    @classmethod
+    def build(cls, tables: Sequence[Any]) -> "EmbeddingCollection":
+        tables = tuple(tables)
+        by_sig: dict[Any, list[int]] = {}
+        for i, t in enumerate(tables):
+            sig_fn = getattr(t, "group_signature", None)
+            sig = sig_fn() if sig_fn is not None else ("loop", i)
+            by_sig.setdefault(sig, []).append(i)
+        groups = []
+        for sig, feats in by_sig.items():  # insertion order: first feature
+            kind = sig[0] if sig[0] in ("cce", "full") else "loop"
+            for bucket in cls._partition(kind, feats, tables):
+                groups.append(
+                    TableGroup(kind, tuple(bucket), tuple(tables[i] for i in bucket))
+                )
+        return cls(tables, tuple(groups))
+
+    @staticmethod
+    def _partition(kind, feats, tables):
+        """Split a signature bucket when padding would be pathological:
+        full tables pad the VOCAB axis, so a (tiny, huge) mix is re-split
+        by d1 ratio; cce pads only the (budget-bounded) codebook axis and
+        never splits."""
+        if kind != "full" or len(feats) <= 1:
+            return [feats]
+        feats = sorted(feats, key=lambda i: tables[i].d1)
+        buckets, cur = [], [feats[0]]
+        for i in feats[1:]:
+            if tables[i].d1 > FULL_PAD_RATIO * tables[cur[0]].d1:
+                buckets.append(cur)
+                cur = [i]
+            else:
+                cur.append(i)
+        buckets.append(cur)
+        return buckets
+
+    # --- shape facts ------------------------------------------------------
+
+    @property
+    def n_features(self) -> int:
+        return len(self.tables)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_lookup_launches(self) -> int:
+        """Heavy table-lookup ops per forward pass: 1 per fused group,
+        1 per feature of a loop group (the quantity the refactor drives
+        from O(n_features) to O(n_groups))."""
+        return sum(
+            len(g.features) if g.kind == "loop" else 1 for g in self.groups
+        )
+
+    @functools.cached_property
+    def _locate(self) -> dict[int, tuple[int, int]]:
+        """feature index -> (group index, index within group)."""
+        out = {}
+        for g, grp in enumerate(self.groups):
+            for f_local, i in enumerate(grp.features):
+                out[i] = (g, f_local)
+        return out
+
+    # --- init / stacking --------------------------------------------------
+
+    def init(self, key):
+        """Per-feature init (same fold_in(key, i) schedule as the legacy
+        per-table loop, so the stacked slices are bit-identical to the
+        old layout), then stack into the grouped layout."""
+        per_p, per_b = [], []
+        for i, t in enumerate(self.tables):
+            p, b = t.init(jax.random.fold_in(key, i))
+            per_p.append(p)
+            per_b.append(b)
+        return self.stack_params(per_p), self.stack_buffers(per_b)
+
+    def stack_group_params(self, grp: TableGroup, params_seq):
+        if grp.kind == "cce":
+            return CCE.stack_many(grp.tables, params_seq)
+        if grp.kind == "full":
+            return emb_lib.FullTable.stack_many(grp.tables, params_seq)
+        return list(params_seq)
+
+    def unstack_group_params(self, grp: TableGroup, group_params):
+        if grp.kind == "cce":
+            return CCE.unstack_many(grp.tables, group_params)
+        if grp.kind == "full":
+            return emb_lib.FullTable.unstack_many(grp.tables, group_params)
+        return list(group_params)
+
+    def stack_params(self, per_feature):
+        """Legacy per-feature params list -> grouped layout."""
+        return [
+            self.stack_group_params(grp, [per_feature[i] for i in grp.features])
+            for grp in self.groups
+        ]
+
+    def unstack_params(self, grouped):
+        """Grouped layout -> legacy per-feature params list."""
+        out = [None] * self.n_features
+        for g, grp in enumerate(self.groups):
+            per = self.unstack_group_params(grp, grouped[g])
+            for f_local, i in enumerate(grp.features):
+                out[i] = per[f_local]
+        return out
+
+    def stack_buffers(self, per_feature):
+        """Buffers regroup only (no array surgery — see module docstring)."""
+        return [[per_feature[i] for i in grp.features] for grp in self.groups]
+
+    def unstack_buffers(self, grouped):
+        out = [None] * self.n_features
+        for g, grp in enumerate(self.groups):
+            for f_local, i in enumerate(grp.features):
+                out[i] = grouped[g][f_local]
+        return out
+
+    def feature_params(self, emb_params, i: int):
+        """Per-feature view into the grouped params (tests, serving)."""
+        g, f_local = self._locate[i]
+        return self.unstack_group_params(self.groups[g], emb_params[g])[f_local]
+
+    def feature_buffers(self, emb_buffers, i: int):
+        g, f_local = self._locate[i]
+        return emb_buffers[g][f_local]
+
+    # --- the hot path -----------------------------------------------------
+
+    def lookup_all(self, emb_params, emb_buffers, sparse, *, use_kernel=True):
+        """All features' embeddings in O(n_groups) heavy lookups.
+
+        sparse (B, n_features) int32 -> (B, n_features, d2).  CCE groups
+        route through the fused Pallas kernel when ``use_kernel`` (Mosaic
+        on TPU, interpret mode on CPU); ``use_kernel=False`` is the vmapped
+        jnp gather path — identical math, used as the numerics oracle and
+        as the GPU fallback."""
+        outs = [None] * self.n_features
+        for g, grp in enumerate(self.groups):
+            ids = jnp.take(sparse, jnp.asarray(grp.features), axis=1)  # (B, Fg)
+            if grp.kind == "cce":
+                vecs = CCE.lookup_many(
+                    grp.tables, emb_params[g], emb_buffers[g], ids,
+                    use_kernel=use_kernel,
+                )
+            elif grp.kind == "full":
+                vecs = emb_lib.FullTable.lookup_many(
+                    grp.tables, emb_params[g], emb_buffers[g], ids
+                )
+            else:
+                vecs = emb_lib.lookup_many_loop(
+                    grp.tables, emb_params[g], emb_buffers[g], ids
+                )
+            for f_local, i in enumerate(grp.features):
+                outs[i] = vecs[:, f_local]
+        return jnp.stack(outs, axis=1)
+
+
+def legacy_layout_migration(coll: EmbeddingCollection):
+    """Checkpoint migration pair for pre-collection (per-feature) layouts.
+
+    Returns ``(to_old, to_new)`` for ``checkpoint.load_checkpoint``'s
+    ``migrations``: ``to_old(new_template)`` derives the legacy template a
+    per-table-era writer produced (params["emb"] / optimizer moments / err
+    per feature, ebuf per feature), and ``to_new(old_tree)`` re-stacks a
+    restored legacy tree into the grouped layout.  Stacking only pads with
+    zeros (codebook / vocab padding), so a legacy checkpoint restores
+    BIT-EXACT into the grouped state — tested in test_collection.py.
+    """
+
+    def _emb(tree, fn):
+        return dict(tree, emb=fn(tree["emb"])) if isinstance(tree, dict) and "emb" in tree else tree
+
+    def _state(state, pfn, bfn):
+        opt = state.opt
+        if isinstance(opt, dict):
+            opt = {k: _emb(v, pfn) if isinstance(v, dict) else v for k, v in opt.items()}
+        return state._replace(
+            params=_emb(state.params, pfn),
+            opt=opt,
+            ebuf=_emb(state.ebuf, bfn),
+            err=_emb(state.err, pfn) if isinstance(state.err, dict) else state.err,
+        )
+
+    def to_old(tree):
+        return dict(
+            tree,
+            state=_state(tree["state"], coll.unstack_params, coll.unstack_buffers),
+        )
+
+    def to_new(tree):
+        return dict(
+            tree,
+            state=_state(tree["state"], coll.stack_params, coll.stack_buffers),
+        )
+
+    return to_old, to_new

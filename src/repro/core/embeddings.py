@@ -66,6 +66,50 @@ class FullTable:
     def sketch_matrix(self, buffers) -> np.ndarray:
         return np.eye(self.d1, dtype=np.float32)
 
+    # --- collection grouping (DESIGN.md §3) ------------------------------
+
+    def group_signature(self):
+        """Full tables with the same output dim batch into one padded
+        (F, max d1, d2) gather; vocab size is NOT in the signature — the
+        collection sub-partitions groups whose d1 spread would make the
+        padding expensive (see ``EmbeddingCollection.build``)."""
+        return ("full", self.d2, str(jnp.dtype(self.dtype)))
+
+    @staticmethod
+    def stack_many(tables, params_seq):
+        """Per-feature {"table": (d1_f, d2)} -> {"table": (F, max d1_f, d2)},
+        zero-padding the row axis.  Padded rows are unreachable (ids are
+        < d1_f) and so stay exactly zero under training."""
+        d1_pad = max(t.d1 for t in tables)
+        return {
+            "table": jnp.stack(
+                [
+                    jnp.pad(p["table"], ((0, d1_pad - t.d1), (0, 0)))
+                    for t, p in zip(tables, params_seq)
+                ]
+            )
+        }
+
+    @staticmethod
+    def unstack_many(tables, group_params):
+        return [
+            {"table": group_params["table"][f, : t.d1]}
+            for f, t in enumerate(tables)
+        ]
+
+    @staticmethod
+    def lookup_many(tables, group_params, buffers_seq, ids):
+        """ONE padded gather for the whole group: ids (B, F) into the
+        stacked (F, d1_pad, d2) table -> (B, F, d2).  Ids clamp to each
+        feature's own vocab — matching the per-table gather's out-of-range
+        semantics (XLA clamps), and keeping an out-of-range id from
+        reaching (and training) another feature's padding rows."""
+        F = len(tables)
+        caps = jnp.asarray([t.d1 - 1 for t in tables], ids.dtype)  # (F,)
+        return group_params["table"][
+            jnp.arange(F)[None, :], jnp.minimum(ids, caps[None, :])
+        ]
+
 
 @dataclasses.dataclass(frozen=True)
 class HashingTrick:
@@ -467,6 +511,18 @@ METHODS = {
     "dhe": DHE,
     "tt": TensorTrain,
 }
+
+
+def lookup_many_loop(tables, params_seq, buffers_seq, ids):
+    """Fallback batched-lookup protocol: any method without a fused
+    ``lookup_many`` loops feature-by-feature.  ids (B, F) -> (B, F, d2)."""
+    return jnp.stack(
+        [
+            t.lookup(params_seq[f], buffers_seq[f], ids[:, f])
+            for f, t in enumerate(tables)
+        ],
+        axis=1,
+    )
 
 
 def make_table(method: str, d1: int, d2: int, budget: int | None = None, **kw):

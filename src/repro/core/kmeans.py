@@ -4,6 +4,14 @@ and a distributed (data-parallel, psum) variant for pod-scale clustering.
 This replaces the paper's FAISS dependency.  Following the paper's
 reproducibility notes we default to ``niter=50`` and subsample to
 ``max_points_per_centroid=256`` points per centroid.
+
+All entry points take optional per-point ``weights``: a weighted Lloyd
+iteration on unique points is EXACTLY the unweighted iteration on the
+multiset where point i appears weights[i] times (the transition feeds the
+observed id histogram here instead of sampling with replacement — same
+distribution, every observed id exactly once, no sampling variance).
+``weights=None`` keeps the historical unweighted code path bit-for-bit
+(including the kmeans++ seeding draws), so existing callers are unchanged.
 """
 from __future__ import annotations
 
@@ -38,18 +46,27 @@ def assign(x: jax.Array, c: jax.Array, *, use_kernel: bool = False) -> jax.Array
 
 
 @partial(jax.jit, static_argnames=("k",))
-def kmeans_plus_plus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """kmeans++ seeding (sequential, lax.fori_loop)."""
+def kmeans_plus_plus(key: jax.Array, x: jax.Array, k: int,
+                     weights: jax.Array | None = None) -> jax.Array:
+    """kmeans++ seeding (sequential, lax.fori_loop).  With ``weights`` the
+    D² sampling distribution becomes w·D² (a weight-w point seeds exactly
+    like w coincident unit-weight copies); without, the historical
+    unweighted draws are reproduced bit-for-bit."""
     n = x.shape[0]
     k0, key = jax.random.split(key)
-    first = x[jax.random.randint(k0, (), 0, n)]
+    if weights is None:
+        first = x[jax.random.randint(k0, (), 0, n)]
+    else:
+        w = weights.astype(jnp.float32)
+        first = x[jax.random.choice(k0, n, p=w / jnp.maximum(w.sum(), 1e-30))]
     centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
     d2 = jnp.sum((x - first) ** 2, axis=-1)
 
     def body(i, carry):
         centroids, d2, key = carry
         key, kc = jax.random.split(key)
-        p = d2 / jnp.maximum(d2.sum(), 1e-30)
+        score = d2 if weights is None else d2 * weights
+        p = score / jnp.maximum(score.sum(), 1e-30)
         idx = jax.random.choice(kc, n, p=p)
         c = x[idx]
         centroids = centroids.at[i].set(c)
@@ -60,15 +77,21 @@ def kmeans_plus_plus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return centroids
 
 
-def _lloyd_step(x, centroids, k, use_kernel: bool = False):
+def _lloyd_step(x, centroids, k, use_kernel: bool = False, weights=None):
     a = assign(x, centroids, use_kernel=use_kernel)
     onehot = jax.nn.one_hot(a, k, dtype=x.dtype)  # (n, k)
-    counts = onehot.sum(axis=0)  # (k,)
-    sums = onehot.T @ x  # (k, d)
-    new_c = sums / jnp.maximum(counts[:, None], 1.0)
+    if weights is None:
+        counts = onehot.sum(axis=0)  # (k,)
+        sums = onehot.T @ x  # (k, d)
+    else:
+        w = weights.astype(x.dtype)[:, None]  # (n, 1)
+        counts = (onehot * w).sum(axis=0)
+        sums = onehot.T @ (x * w)
+    new_c = sums / jnp.maximum(counts[:, None], 1e-12 if weights is not None else 1.0)
     # keep empty clusters where they were
     new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
-    inertia = jnp.sum((x - new_c[a]) ** 2)
+    d2 = jnp.sum((x - new_c[a]) ** 2, axis=-1)
+    inertia = jnp.sum(d2 if weights is None else d2 * weights)
     return new_c, a, inertia
 
 
@@ -79,17 +102,21 @@ def kmeans(
     k: int,
     niter: int = 50,
     use_kernel: bool = False,
+    weights: jax.Array | None = None,
 ) -> KMeansResult:
     """Full-batch Lloyd's algorithm with kmeans++ init.  ``use_kernel``
     routes every per-iteration assignment through the Pallas kernel
     (worth it on TPU at clustering scale; interpret-mode on CPU is for
-    validation only)."""
+    validation only).  ``weights`` runs the count-weighted variant: the
+    result equals unweighted k-means on the expanded multiset."""
     x = x.astype(jnp.float32)
-    centroids = kmeans_plus_plus(key, x, k)
+    if weights is not None:
+        weights = weights.astype(jnp.float32)
+    centroids = kmeans_plus_plus(key, x, k, weights)
 
     def body(_, carry):
         c, _, _ = carry
-        return _lloyd_step(x, c, k, use_kernel)
+        return _lloyd_step(x, c, k, use_kernel, weights)
 
     a0 = jnp.zeros((x.shape[0],), jnp.int32)
     centroids, a, inertia = jax.lax.fori_loop(
@@ -114,12 +141,18 @@ def subsample(key: jax.Array, n: int, k: int, max_points_per_centroid: int = 256
 
 
 def distributed_lloyd_iter(x_local: jax.Array, centroids: jax.Array, k: int,
-                           axis_name: str, use_kernel: bool = False):
+                           axis_name: str, use_kernel: bool = False,
+                           weights=None):
     a = assign(x_local, centroids, use_kernel=use_kernel)
     onehot = jax.nn.one_hot(a, k, dtype=x_local.dtype)
-    counts = jax.lax.psum(onehot.sum(axis=0), axis_name)
-    sums = jax.lax.psum(onehot.T @ x_local, axis_name)
-    new_c = sums / jnp.maximum(counts[:, None], 1.0)
+    if weights is None:
+        local_counts, local_sums = onehot.sum(axis=0), onehot.T @ x_local
+    else:
+        w = weights.astype(x_local.dtype)[:, None]
+        local_counts, local_sums = (onehot * w).sum(axis=0), onehot.T @ (x_local * w)
+    counts = jax.lax.psum(local_counts, axis_name)
+    sums = jax.lax.psum(local_sums, axis_name)
+    new_c = sums / jnp.maximum(counts[:, None], 1e-12 if weights is not None else 1.0)
     new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
     return new_c, a
 
@@ -131,11 +164,15 @@ def distributed_kmeans(
     axis_name: str,
     niter: int = 50,
     use_kernel: bool = False,
+    weights: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Run inside shard_map/pmap over ``axis_name``.  Seeds from the first
-    shard's local sample (kmeans++ on local slice is a standard approximation)."""
+    shard's local sample (kmeans++ on local slice is a standard approximation).
+    ``weights`` shards with the points (same leading axis)."""
     x_local = x_local.astype(jnp.float32)
-    centroids = kmeans_plus_plus(key, x_local, k)
+    if weights is not None:
+        weights = weights.astype(jnp.float32)
+    centroids = kmeans_plus_plus(key, x_local, k, weights)
     # make the seed identical on all shards: average is wrong, so broadcast
     # shard 0's seed via pmean of (seed * is_shard0 * n_shards)
     idx = jax.lax.axis_index(axis_name)
@@ -144,7 +181,8 @@ def distributed_kmeans(
     )
 
     def body(_, c):
-        c, _ = distributed_lloyd_iter(x_local, c, k, axis_name, use_kernel)
+        c, _ = distributed_lloyd_iter(x_local, c, k, axis_name, use_kernel,
+                                      weights)
         return c
 
     centroids = jax.lax.fori_loop(0, niter, body, centroids)

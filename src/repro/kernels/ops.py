@@ -87,6 +87,28 @@ def cce_lookup(
     return _cce_lookup(idx, tables, b_blk, k_blk)
 
 
+def pad_stack_tables(slabs, *, k_pad: int | None = None) -> jax.Array:
+    """Ragged group stacking for the ``EmbeddingCollection`` supertable.
+
+    Per-feature table slabs (c_f, T, k_f, dsub) — same T/dsub, ragged
+    codebook size k_f — concatenate along columns into a single
+    (sum c_f, T, max k_f, dsub) supertable, zero-padding the codebook
+    axis.  The contract that makes the padding free: row ids into column
+    f are always < k_f (learned pointers and helper hashes are both
+    mod-k_f), so padded rows are never touched by the forward one-hot
+    and receive exactly-zero gradient from the backward scatter-add.
+    ``cce_lookup`` then pads max k_f up to the k_blk multiple on top.
+    """
+    k_pad = k_pad or max(s.shape[2] for s in slabs)
+    return jnp.concatenate(
+        [
+            jnp.pad(s, ((0, 0), (0, 0), (0, k_pad - s.shape[2]), (0, 0)))
+            for s in slabs
+        ],
+        axis=0,
+    )
+
+
 # --- flash attention ----------------------------------------------------------
 
 

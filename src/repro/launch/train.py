@@ -121,6 +121,8 @@ def build_dlrm_trainer(args):
         accum=args.accum,
         failures=FailureInjector(tuple(args.fail_at)),
         seed=args.seed,
+        # pre-collection (per-feature emb layout) checkpoints restore too
+        migrations=dlrm.checkpoint_migrations(cfg),
     )
 
 

@@ -5,10 +5,21 @@ table each (every table independently compressible by any method in the
 unified sketch framework, incl. CCE); pairwise dot-product interaction;
 top MLP -> 1 logit; Binary Cross-Entropy loss.  Matches the open-source
 DLRM benchmark configuration the paper trains on Criteo.
+
+The 26 tables live behind an ``EmbeddingCollection`` (core/collection.py):
+fuse-compatible tables are stacked into grouped supertables and the whole
+forward issues O(n_groups) heavy lookups — for the compressed Criteo
+config that is ONE fused Pallas ``cce_lookup`` launch for all CCE tables
+plus one padded gather for the small full tables, instead of 26
+independent gathers.  ``params["emb"]``/``buffers["emb"]`` are in the
+collection's grouped layout; use ``cfg.collection.feature_params`` /
+``feature_buffers`` for a per-feature view, and
+``checkpoint_migrations(cfg)`` to restore pre-collection checkpoints.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Sequence
 
@@ -16,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embeddings as emb_lib
+from repro.core.collection import EmbeddingCollection, legacy_layout_migration
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,13 +48,20 @@ class DLRMConfig:
     # stream so (c, d1, dsub) never materializes at once)
     emb_opt_policy: str = "remap"
     emb_cluster_chunk: int = 1 << 18
+    # route grouped CCE lookups through the fused Pallas kernel.  None =
+    # auto: Mosaic on TPU, interpret mode on CPU, jnp gather path on GPU
+    # (the kernel is TPU-shaped; GPUs have fast native gathers).  CPU
+    # interpret mode is SLOWER than the jnp path — it stays the default
+    # deliberately so training exercises the exact kernel that ships to
+    # TPU (this container's validation contract); set False for CPU speed.
+    emb_use_kernel: bool | None = None
     dtype: Any = jnp.float32
 
     @property
     def n_sparse(self) -> int:
         return len(self.vocab_sizes)
 
-    def table(self, i: int):
+    def _build_table(self, i: int):
         v = self.vocab_sizes[i]
         cap = self.emb_param_cap
         if self.emb_method == "full" or not cap or v * self.emb_dim <= cap:
@@ -53,6 +72,17 @@ class DLRMConfig:
             self.emb_method, v, self.emb_dim, budget=cap, c=self.emb_c,
             dtype=self.dtype, seed_salt=i,
         )
+
+    @functools.cached_property
+    def collection(self) -> EmbeddingCollection:
+        """The grouped-table view — built ONCE per config (forward and the
+        transition used to reconstruct every table object on every call)."""
+        return EmbeddingCollection.build(
+            tuple(self._build_table(i) for i in range(self.n_sparse))
+        )
+
+    def table(self, i: int):
+        return self.collection.tables[i]
 
     def n_emb_params(self) -> int:
         return sum(self.table(i).n_params for i in range(self.n_sparse))
@@ -87,14 +117,9 @@ def init(key, cfg: DLRMConfig):
         "bottom": _init_mlp(kb, (cfg.n_dense, *cfg.bottom_mlp), cfg.dtype),
     }
     buffers: dict[str, Any] = {}
-    emb_params = []
-    emb_buffers = []
-    for i in range(cfg.n_sparse):
-        p, b = cfg.table(i).init(jax.random.fold_in(ke, i))
-        emb_params.append(p)
-        emb_buffers.append(b)
-    params["emb"] = emb_params
-    buffers["emb"] = emb_buffers
+    # grouped layout: one stacked supertable per fuse-compatible group
+    # (slices bit-identical to the legacy per-table init)
+    params["emb"], buffers["emb"] = cfg.collection.init(ke)
     n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
     top_in = cfg.bottom_mlp[-1] + n_pairs
     params["top"] = _init_mlp(kt, (top_in, *cfg.top_mlp), cfg.dtype)
@@ -104,13 +129,14 @@ def init(key, cfg: DLRMConfig):
 def forward(params, buffers, cfg: DLRMConfig, batch):
     """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits."""
     dense = batch["dense"].astype(cfg.dtype)
-    sparse = batch["sparse"]
     x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
-    vecs = [x0]
-    for i in range(cfg.n_sparse):
-        t = cfg.table(i)
-        vecs.append(t.lookup(params["emb"][i], buffers["emb"][i], sparse[:, i]))
-    V = jnp.stack(vecs, axis=1)  # (B, 27, emb_dim)
+    use_kernel = cfg.emb_use_kernel
+    if use_kernel is None:
+        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    emb = cfg.collection.lookup_all(
+        params["emb"], buffers["emb"], batch["sparse"], use_kernel=use_kernel,
+    )  # (B, n_sparse, emb_dim) in O(n_groups) lookups
+    V = jnp.concatenate([x0[:, None, :], emb], axis=1)  # (B, 27, emb_dim)
     # pairwise dot interactions (upper triangle, no self)
     inter = jnp.einsum("bie,bje->bij", V, V)
     iu, ju = jnp.triu_indices(V.shape[1], k=1)
@@ -131,7 +157,7 @@ def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
                    use_kernel: bool | None = None,
                    max_points_per_centroid: int = 256):
     """Run the CCE clustering transition on every CCE table (the training
-    callback — Alg. 3 `Cluster`).
+    callback — Alg. 3 `Cluster`), group-wise through the collection.
 
     With ``opt`` (the optimizer state, e.g. from ``TrainState.opt``), the
     per-row moments of every transitioned table are carried through the new
@@ -141,40 +167,38 @@ def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
     as before (moments go stale; kept for ablation/legacy callers).
 
     ``id_counts`` (per-feature histograms, e.g. ``IdFrequencyTracker.counts``)
-    draws each table's k-means sample from the OBSERVED id distribution —
-    the paper's epoch-boundary sampling.  Without it the sample is uniform
-    over the vocab, which on Zipf data lets the never-trained tail dominate
-    the centroids.
+    runs each table's k-means count-WEIGHTED on the OBSERVED ids — the
+    paper's epoch-boundary distribution with zero sampling variance — and
+    weights the moment remap the same way.  Without it the sample is
+    uniform over the vocab, which on Zipf data lets the never-trained tail
+    dominate the centroids.
     """
-    from repro.core.cce import CCE
     from repro.optim.remap import remap_opt_state
-    from repro.train.transition import transition_table
+    from repro.train.transition import transition_collection
 
     policy = policy or cfg.emb_opt_policy
     if chunk_size is None:
         chunk_size = cfg.emb_cluster_chunk or None
-    new_p, new_b = list(params["emb"]), list(buffers["emb"])
-    updates = {}  # table index -> moment-update fn (shared across slots)
-    for i in range(cfg.n_sparse):
-        t = cfg.table(i)
-        if isinstance(t, CCE):
-            new_p[i], new_b[i], updates[i] = transition_table(
-                t, jax.random.fold_in(key, i),
-                params["emb"][i], buffers["emb"][i],
-                counts=id_counts[i] if id_counts is not None else None,
-                policy=policy, chunk_size=chunk_size, use_kernel=use_kernel,
-                max_points_per_centroid=max_points_per_centroid,
-            )
-    new_params, new_buffers = dict(params, emb=new_p), dict(buffers, emb=new_b)
+    new_emb_p, new_emb_b, update_emb = transition_collection(
+        cfg.collection, key, params["emb"], buffers["emb"],
+        id_counts=id_counts, policy=policy, chunk_size=chunk_size,
+        use_kernel=use_kernel, max_points_per_centroid=max_points_per_centroid,
+    )
+    new_params = dict(params, emb=new_emb_p)
+    new_buffers = dict(buffers, emb=new_emb_b)
     if opt is None:
         return new_params, new_buffers
 
     def update_moments(moments, _slot):
-        emb = list(moments["emb"])
-        for i, fn in updates.items():
-            emb[i] = fn(emb[i])
-        return dict(moments, emb=emb)
+        return dict(moments, emb=update_emb(moments["emb"]))
 
     return new_params, new_buffers, remap_opt_state(
         opt, update_moments, policy=policy
     )
+
+
+def checkpoint_migrations(cfg: DLRMConfig):
+    """``Trainer(migrations=...)`` entry for pre-collection checkpoints:
+    restores the legacy per-feature emb layout bit-exact into the grouped
+    supertables (params, optimizer moments, buffers, error feedback)."""
+    return [legacy_layout_migration(cfg.collection)]

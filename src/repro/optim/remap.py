@@ -63,3 +63,29 @@ def remap_opt_state(
 def zeros_like_moments(moments: Pytree) -> Pytree:
     """The ``"reset"`` policy for one table's moment subtree."""
     return jax.tree.map(jnp.zeros_like, moments)
+
+
+def collection_moment_updater(coll, group_updates):
+    """Moment transform for the GROUPED embedding layout.
+
+    Optimizer moments mirror params, so under an ``EmbeddingCollection``
+    a CCE group's moments live in one stacked (F·c, 2, k, dsub) slab.
+    ``group_updates`` maps group index -> {feature-local index ->
+    per-feature moment-update fn (from ``transition_table``)}; the
+    returned function slices each transitioned feature's block out of the
+    slab, applies its update, and re-stacks — zero-padded moment rows
+    (ragged codebooks) stay zero, mirroring their never-touched params.
+    Applied once per moment slot (Adam's m AND v) by ``remap_opt_state``.
+    """
+
+    def update(emb_moments):
+        out = list(emb_moments)
+        for g, fns in group_updates.items():
+            grp = coll.groups[g]
+            per = coll.unstack_group_params(grp, emb_moments[g])
+            for f_local, fn in fns.items():
+                per[f_local] = fn(per[f_local])
+            out[g] = coll.stack_group_params(grp, per)
+        return out
+
+    return update

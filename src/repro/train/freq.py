@@ -25,14 +25,58 @@ def sample_from_counts(counts: np.ndarray, n: int, seed: int) -> np.ndarray | No
     """Draw ``n`` ids ~ ``counts`` (with replacement — duplicates ARE the
     frequency weighting, exactly what an epoch-boundary sample would
     contain).  None when nothing has been counted yet (callers fall back
-    to uniform).  THE sampling primitive for the transition: tracker and
-    ``dlrm.cluster_tables`` both route through it."""
+    to uniform).  Kept for diagnostics/ablation; the transition now uses
+    ``points_from_counts`` (the zero-variance weighted form)."""
     counts = np.asarray(counts)
     total = int(counts.sum())
     if total == 0:
         return None
     rng = np.random.default_rng(seed)
     return rng.choice(counts.shape[0], size=n, replace=True, p=counts / total)
+
+
+def points_from_counts(
+    counts: np.ndarray, n: int, seed: int
+) -> tuple[np.ndarray, np.ndarray] | None:
+    """(ids, weights) for COUNT-WEIGHTED k-means: every observed id exactly
+    once, weighted by its observed frequency.
+
+    The with-replacement draw in ``sample_from_counts`` is an unbiased but
+    noisy estimate of this — a weighted Lloyd iteration on unique points
+    IS the iteration on the epoch-boundary multiset, with no sampling
+    variance and no duplicated materialization work.  None when nothing
+    has been counted yet (uniform fallback).
+
+    When more than ``n`` distinct ids were observed (the FAISS-style cap
+    still bounds the k-means cost), the subsample is STRATIFIED and
+    unbiased: the n/2 highest-count ids enter deterministically with their
+    exact counts (inclusion probability 1), and the tail is sampled
+    uniformly without replacement with counts inflated by the inverse
+    sampling fraction (Horvitz-Thompson).  Sampling the tail ∝ counts and
+    ALSO weighting by counts would double-count frequency (head mass
+    ~count²); uniform-only sampling risks dropping the head entirely —
+    this keeps the estimator unbiased for the weighted objective at low
+    variance where the mass actually is.
+    """
+    counts = np.asarray(counts)
+    nz = np.flatnonzero(counts)
+    if nz.size == 0:
+        return None
+    if nz.size <= n:
+        return nz, counts[nz].astype(np.float32)
+    n_head = n // 2
+    order = np.argsort(counts[nz], kind="stable")[::-1]
+    head = nz[order[:n_head]]
+    rest = nz[order[n_head:]]
+    rng = np.random.default_rng(seed)
+    n_tail = n - n_head
+    tail = rng.choice(rest, size=n_tail, replace=False)
+    w = np.concatenate(
+        [counts[head], counts[tail] * (rest.size / n_tail)]
+    ).astype(np.float32)
+    ids = np.concatenate([head, tail])
+    order = np.argsort(ids, kind="stable")
+    return ids[order], w[order]
 
 
 class IdFrequencyTracker:

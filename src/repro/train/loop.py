@@ -269,6 +269,7 @@ class Trainer:
         monitor: StragglerMonitor | None = None,
         failures: FailureInjector | None = None,
         seed: int = 0,
+        migrations=(),
     ):
         self.train_step = train_step
         self.state = state
@@ -288,6 +289,10 @@ class Trainer:
         self.monitor = monitor or StragglerMonitor()
         self.failures = failures
         self.seed = seed
+        # (to_old, to_new) template/convert pairs for checkpoints written
+        # under older state layouts (e.g. dlrm.checkpoint_migrations for
+        # pre-collection per-feature emb trees)
+        self.migrations = tuple(migrations)
         self.history: list[dict] = []
 
     def _reshape_accum(self, batch):
@@ -361,48 +366,68 @@ class Trainer:
             tree["id_counts"] = self.id_tracker.state_tree()
         return tree
 
+    def _stored_n_leaves(self):
+        """Leaf count of the latest committed checkpoint (None if none) —
+        sizes the id_counts wildcard placeholders."""
+        from repro.checkpoint.store import list_checkpoints
+        import json
+        import os
+
+        ckpts = list_checkpoints(self.ckpt.directory)
+        if not ckpts:
+            return None
+        with open(os.path.join(ckpts[-1][1], "manifest.json")) as f:
+            return int(json.load(f)["n_leaves"])
+
+    def _with_id_counts_placeholder(self, template):
+        """When the WRITER had a tracker this Trainer doesn't, absorb the
+        saved id_counts leaves via zero-size wildcard placeholders sized
+        against THIS template's leaf count (the histograms are dropped).
+        Must be applied per candidate layout — legacy layouts have
+        different leaf counts, so one global placeholder cannot fit all."""
+        if self.id_tracker is not None or "id_counts" in template:
+            return None
+        n_stored = self._stored_n_leaves()
+        if n_stored is None:
+            return None
+        extra = n_stored - len(jax.tree.leaves(template))
+        if extra <= 0:
+            return None
+        return dict(template, id_counts=[np.zeros(0)] * extra)
+
     def _restore_templates(self):
         """Candidate checkpoint layouts, most- to least-informative: the
         current config's layout, then the layouts a differently-configured
         writer could have produced (tracker-less: no id_counts; pre-
-        transition-subsystem: state only).  When the WRITER had a tracker
-        this Trainer doesn't, the saved id_counts leaves are absorbed via
-        a placeholder list sized from the manifest so the state still
-        restores (the histograms are dropped)."""
+        transition-subsystem: state only)."""
         templates = [self._ckpt_tree()]
         base = {"state": self.state, "clusters_done": np.int32(0)}
         if self.id_tracker is not None:
             templates.append(base)  # writer had no tracker
         else:
-            from repro.checkpoint.store import list_checkpoints
-            import json
-            import os
-
-            ckpts = list_checkpoints(self.ckpt.directory)
-            if ckpts:
-                with open(os.path.join(ckpts[-1][1], "manifest.json")) as f:
-                    n_leaves = int(json.load(f)["n_leaves"])
-                extra = n_leaves - len(jax.tree.leaves(base))
-                if extra > 0:  # writer-side id_counts this reader drops
-                    templates.append(
-                        dict(base, id_counts=[np.zeros(0)] * extra)
-                    )
+            with_counts = self._with_id_counts_placeholder(base)
+            if with_counts is not None:  # writer-side id_counts, dropped
+                templates.append(with_counts)
         templates.append({"state": self.state})  # pre-transition layout
         return templates
 
     def restore_latest(self):
         self.ckpt.wait()  # an async save may still be in flight post-crash
-        err: Exception | None = None
-        for template in self._restore_templates():
-            try:
-                step, tree, _ = load_checkpoint(
-                    self.ckpt.directory, template=template
-                )
-                break
-            except ValueError as e:  # leaf/structure mismatch: next layout
-                err = e
-        else:
-            raise err  # no candidate layout matched
+        templates = self._restore_templates()
+        candidates = [(t, None) for t in templates]
+        # legacy layouts: derive each old-layout template from the current
+        # one and restore through its converter (checkpoint.load_checkpoint
+        # picks the first candidate whose leaves match).  The id_counts
+        # placeholder is re-sized against each CONVERTED template — legacy
+        # layouts have different leaf counts.
+        for to_old, to_new in self.migrations:
+            for t in templates:
+                old_t = to_old(t)
+                candidates.append((old_t, to_new))
+                with_counts = self._with_id_counts_placeholder(old_t)
+                if with_counts is not None:
+                    candidates.append((with_counts, to_new))
+        step, tree, _ = load_checkpoint(self.ckpt.directory, migrations=candidates)
         self.state = tree["state"]
         self.clusters_done = int(tree.get("clusters_done", 0))
         if self.id_tracker is not None and "id_counts" in tree:

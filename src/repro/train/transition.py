@@ -1,21 +1,28 @@
-"""One CCE table's complete clustering transition, shared by every model.
+"""The clustering transition, shared by every model (DESIGN.md §2).
 
-``dlrm.cluster_tables`` (26 tables, per-table configs) and the LM
-launcher (one vocab table) need identical plumbing around
-``CCE.cluster``: derive a sampling seed from the transition key, draw the
-k-means sample from observed id frequencies when a histogram exists,
-cluster, and build the moment-update function that ``remap_opt_state``
-applies to each optimizer slot (computing the per-cluster counts once so
-Adam's m AND v reuse them).  Centralizing it here keeps the two paths
-from drifting — policy and chunking knobs reach both.
+``transition_table`` is one CCE table's complete transition:  derive a
+sampling seed from the transition key, build the k-means point set from
+observed id frequencies when a histogram exists (count-WEIGHTED — every
+observed id once, weighted by frequency), cluster, and build the
+moment-update function that ``remap_opt_state`` applies to each optimizer
+slot (computing the per-cluster counts once so Adam's m AND v reuse them).
+
+``transition_collection`` runs it across an ``EmbeddingCollection``:
+per-feature slices come out of the grouped supertables, transition
+independently (each with its own key/histogram), and re-stack — so the
+training loop keeps carrying ONE stacked slab per group through the jitted
+step while the transition stays a per-table algorithm.  The LM launcher
+uses ``transition_table`` directly (one vocab table); centralizing both
+here keeps the paths from drifting.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.optim.remap import zeros_like_moments
-from repro.train.freq import sample_from_counts
+from repro.optim.remap import collection_moment_updater, zeros_like_moments
+from repro.train.freq import points_from_counts
 
 
 def transition_table(
@@ -31,24 +38,29 @@ def transition_table(
     max_points_per_centroid: int = 256,
 ):
     """Returns ``(new_params, new_buffers, update_moments)`` for one CCE
-    table.  ``counts`` is the table's observed id histogram (frequency-
-    weighted k-means sample — the paper's epoch-boundary distribution);
-    None or all-zero falls back to uniform subsampling.
+    table.  ``counts`` is the table's observed id histogram; when present
+    the k-means runs count-WEIGHTED on the observed ids (the paper's
+    epoch-boundary distribution, exactly — not a with-replacement
+    approximation of it) and the moment remap averages with the same
+    weights.  None or all-zero falls back to uniform subsampling.
     ``update_moments(moment_subtree)`` remaps/resets/keeps that table's
     per-row optimizer moments per ``policy``."""
-    sample_ids = None
+    sample_ids = sample_weights = id_weights = None
     if counts is not None:
         seed = int(
             jax.random.randint(jax.random.fold_in(key, 10_007), (), 0, 2**31 - 1)
         )
-        drawn = sample_from_counts(
+        drawn = points_from_counts(
             counts, min(table.d1, max_points_per_centroid * table.k), seed
         )
         if drawn is not None:
-            sample_ids = jnp.asarray(drawn)
+            sample_ids = jnp.asarray(drawn[0])
+            sample_weights = jnp.asarray(drawn[1], jnp.float32)
+            id_weights = jnp.asarray(np.asarray(counts), jnp.float32)
     new_params, new_buffers = table.cluster(
         key, params, buffers,
-        sample_ids=sample_ids, chunk_size=chunk_size, use_kernel=use_kernel,
+        sample_ids=sample_ids, sample_weights=sample_weights,
+        chunk_size=chunk_size, use_kernel=use_kernel,
         max_points_per_centroid=max_points_per_centroid,
     )
     cluster_counts = (
@@ -62,7 +74,52 @@ def transition_table(
             return zeros_like_moments(moments)
         return table.remap_moments(
             moments, buffers, new_buffers,
-            chunk_size=chunk_size, counts=cluster_counts,
+            chunk_size=chunk_size, counts=cluster_counts, id_weights=id_weights,
         )
 
     return new_params, new_buffers, update_moments
+
+
+def transition_collection(
+    coll,
+    key,
+    emb_params,
+    emb_buffers,
+    *,
+    id_counts=None,
+    policy: str = "remap",
+    chunk_size: int | None = None,
+    use_kernel: bool | None = None,
+    max_points_per_centroid: int = 256,
+):
+    """Transition every CCE table behind an ``EmbeddingCollection``.
+
+    ``emb_params``/``emb_buffers`` are the GROUPED layout; each CCE
+    feature's (c, 2, k, dsub) block is sliced out, transitioned with
+    ``jax.random.fold_in(key, feature_index)`` (the same key schedule as
+    the legacy per-table loop, so transitions replay identically from a
+    checkpoint), and re-stacked.  Returns ``(new_params, new_buffers,
+    update_emb)`` where ``update_emb`` transforms a grouped moments["emb"]
+    list group-wise (see ``optim.remap.collection_moment_updater``).
+    ``id_counts`` indexes per-feature histograms by GLOBAL feature index.
+    """
+    new_p, new_b = list(emb_params), list(emb_buffers)
+    group_updates: dict[int, dict[int, object]] = {}
+    for g, grp in enumerate(coll.groups):
+        if grp.kind != "cce":
+            continue
+        per_p = coll.unstack_group_params(grp, emb_params[g])
+        per_b = list(emb_buffers[g])
+        fns = {}
+        for f_local, i in enumerate(grp.features):
+            per_p[f_local], per_b[f_local], fns[f_local] = transition_table(
+                grp.tables[f_local], jax.random.fold_in(key, i),
+                per_p[f_local], per_b[f_local],
+                counts=id_counts[i] if id_counts is not None else None,
+                policy=policy, chunk_size=chunk_size, use_kernel=use_kernel,
+                max_points_per_centroid=max_points_per_centroid,
+            )
+        new_p[g] = coll.stack_group_params(grp, per_p)
+        new_b[g] = per_b
+        group_updates[g] = fns
+    return new_p, new_b, collection_moment_updater(coll, group_updates)

@@ -1,0 +1,371 @@
+"""EmbeddingCollection: grouped supertables == the per-table loop.
+
+The refactor's contract, asserted here:
+  * grouping drops heavy lookups from O(n_features) to O(n_groups),
+  * the fused path (Pallas kernel AND jnp oracle) is numerically
+    equivalent to the legacy per-feature loop — forward and gradients,
+  * ragged codebooks (different k in one group) and the padded full-table
+    gather are exact,
+  * pre-collection (per-feature layout) checkpoints restore BIT-EXACT
+    through ``Trainer.restore_latest`` + ``dlrm.checkpoint_migrations``,
+  * the collection-backed transition keeps the Trainer protocol intact.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import dlrm_criteo
+from repro.core.cce import CCE
+from repro.core.collection import EmbeddingCollection
+from repro.core.embeddings import FullTable
+from repro.models import dlrm
+from repro.models.dlrm import DLRMConfig
+from repro.optim import sgd
+
+
+MIXED = DLRMConfig(
+    vocab_sizes=(8, 1000, 20, 5000, 16, 300),
+    n_dense=13, emb_dim=16, bottom_mlp=(32, 16), top_mlp=(32, 1),
+    emb_method="cce", emb_param_cap=512,
+)
+
+
+def _batch(cfg, B=9, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "dense": jnp.asarray(rng.normal(size=(B, cfg.n_dense)), jnp.float32),
+        "sparse": jnp.asarray(
+            np.stack([rng.integers(0, v, B) for v in cfg.vocab_sizes], axis=1),
+            jnp.int32,
+        ),
+        "label": jnp.asarray(rng.integers(0, 2, B), jnp.float32),
+    }
+
+
+def _per_feature_lookup(coll, emb_params, emb_buffers, sparse):
+    """The legacy hot loop: one lookup per feature."""
+    per_p = coll.unstack_params(emb_params)
+    per_b = coll.unstack_buffers(emb_buffers)
+    return jnp.stack(
+        [
+            coll.tables[i].lookup(per_p[i], per_b[i], sparse[:, i])
+            for i in range(coll.n_features)
+        ],
+        axis=1,
+    )
+
+
+# --- grouping ------------------------------------------------------------
+
+
+def test_grouping_collapses_launches():
+    # all-compressed reduced config: every table fuses into ONE launch
+    coll = dlrm_criteo.reduced(emb_method="cce", cap=512).collection
+    assert coll.n_features == 5 and coll.n_groups == 1
+    assert coll.n_lookup_launches == 1
+    assert coll.groups[0].kind == "cce"
+    # mixed config: one cce group + one full group
+    coll = MIXED.collection
+    kinds = sorted(g.kind for g in coll.groups)
+    assert kinds == ["cce", "full"]
+    assert coll.n_lookup_launches == 2
+    # every feature appears in exactly one group
+    feats = sorted(i for g in coll.groups for i in g.features)
+    assert feats == list(range(coll.n_features))
+
+
+def test_full_groups_split_on_pathological_padding():
+    """A (tiny, huge) full-table mix must NOT pad the tiny table to the
+    huge vocab."""
+    tables = tuple(FullTable(d1, 16) for d1 in (8, 16, 100_000))
+    coll = EmbeddingCollection.build(tables)
+    full_groups = [g for g in coll.groups if g.kind == "full"]
+    assert len(full_groups) == 2  # {8, 16} together, 100k alone
+    sizes = sorted(tuple(t.d1 for t in g.tables) for g in full_groups)
+    assert sizes == [(8, 16), (100_000,)]
+
+
+def test_loop_fallback_for_unfusable_methods():
+    coll = dlrm_criteo.reduced(emb_method="ce", cap=512).collection
+    assert all(g.kind == "loop" for g in coll.groups)
+    assert coll.n_lookup_launches == coll.n_features
+
+
+def test_cached_collection_is_not_reconstructed():
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    assert cfg.collection is cfg.collection  # cached_property, one build
+    assert cfg.table(0) is cfg.collection.tables[0]
+
+
+# --- numerics: fused == looped --------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_lookup_all_matches_per_feature_loop(use_kernel):
+    cfg = MIXED
+    coll = cfg.collection
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    sparse = _batch(cfg, B=33)["sparse"]  # B not a block multiple
+    got = coll.lookup_all(
+        params["emb"], buffers["emb"], sparse, use_kernel=use_kernel
+    )
+    want = _per_feature_lookup(coll, params["emb"], buffers["emb"], sparse)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_lookup_all_grads_match_per_feature_loop(use_kernel):
+    cfg = MIXED
+    coll = cfg.collection
+    params, buffers = dlrm.init(jax.random.PRNGKey(1), cfg)
+    sparse = _batch(cfg, B=17, seed=1)["sparse"]
+    co = jax.random.normal(jax.random.PRNGKey(2), (17, cfg.n_sparse, cfg.emb_dim))
+
+    def loss_fused(emb_p):
+        out = coll.lookup_all(emb_p, buffers["emb"], sparse, use_kernel=use_kernel)
+        return jnp.sum(out * co)
+
+    def loss_looped(emb_p):
+        out = _per_feature_lookup(coll, emb_p, buffers["emb"], sparse)
+        return jnp.sum(out * co)
+
+    g1 = jax.grad(loss_fused)(params["emb"])
+    g2 = jax.grad(loss_looped)(params["emb"])
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_dlrm_forward_kernel_path_matches_jnp_path():
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, B=21)
+    out_k = dlrm.forward(params, buffers, cfg, batch)
+    cfg_j = dataclasses.replace(cfg, emb_use_kernel=False)
+    out_j = dlrm.forward(params, buffers, cfg_j, batch)
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_j), rtol=1e-5, atol=1e-5
+    )
+    g_k = jax.grad(lambda p: dlrm.bce_loss(p, buffers, cfg, batch))(params)
+    g_j = jax.grad(lambda p: dlrm.bce_loss(p, buffers, cfg_j, batch))(params)
+    for a, b in zip(jax.tree.leaves(g_k), jax.tree.leaves(g_j)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6
+        )
+
+
+def test_ragged_codebooks_fuse_exactly():
+    """Two CCE tables with DIFFERENT k in one group: the supertable pads
+    the codebook axis and lookups stay exact, grads land only in real rows."""
+    t1 = CCE(d1=100, d2=16, k=5, c=4, seed_salt=0)
+    t2 = CCE(d1=200, d2=16, k=12, c=4, seed_salt=1)
+    coll = EmbeddingCollection.build((t1, t2))
+    assert coll.n_groups == 1 and coll.groups[0].kind == "cce"
+    params, buffers = coll.init(jax.random.PRNGKey(0))
+    assert params[0]["tables"].shape == (8, 2, 12, 4)  # padded to max k
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 100, (13, 2)), jnp.int32)
+    got = coll.lookup_all(params, buffers, ids, use_kernel=True)
+    want = _per_feature_lookup(coll, params, buffers, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    # gradient never touches the padding rows of the small-k table
+    g = jax.grad(
+        lambda p: jnp.sum(coll.lookup_all(p, buffers, ids, use_kernel=True) ** 2)
+    )(params)
+    assert float(np.abs(np.asarray(g[0]["tables"][:4, :, 5:, :])).max()) == 0.0
+
+
+def test_full_group_clamps_out_of_range_ids_like_per_table():
+    """An id >= a small table's vocab must clamp to ITS last row (the
+    per-table XLA gather semantics), not read — or train — the padding
+    rows of the stacked (F, max d1, d2) table."""
+    tables = (FullTable(4, 8), FullTable(16, 8))
+    coll = EmbeddingCollection.build(tables)
+    params, buffers = coll.init(jax.random.PRNGKey(0))
+    ids = jnp.asarray([[4, 0], [99, 15]], jnp.int32)  # 4, 99 out of range for d1=4
+    got = coll.lookup_all(params, buffers, ids)
+    want = _per_feature_lookup(coll, params, buffers, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # gradient lands in the clamped real row, never in the padding
+    g = jax.grad(lambda p: jnp.sum(coll.lookup_all(p, buffers, ids) ** 2))(params)
+    assert float(np.abs(np.asarray(g[0]["table"][0, 4:])).max()) == 0.0
+
+
+def test_stack_unstack_roundtrip_bitexact():
+    cfg = MIXED
+    coll = cfg.collection
+    params, buffers = dlrm.init(jax.random.PRNGKey(2), cfg)
+    rt = coll.stack_params(coll.unstack_params(params["emb"]))
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(params["emb"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rt_b = coll.stack_buffers(coll.unstack_buffers(buffers["emb"]))
+    assert jax.tree.structure(rt_b) == jax.tree.structure(buffers["emb"])
+    # per-feature views agree with unstack
+    per = coll.unstack_params(params["emb"])
+    for i in range(coll.n_features):
+        for a, b in zip(
+            jax.tree.leaves(coll.feature_params(params["emb"], i)),
+            jax.tree.leaves(per[i]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- legacy checkpoint migration ------------------------------------------
+
+
+def test_legacy_per_feature_checkpoint_restores_bitexact(tmp_path):
+    """A checkpoint written under the pre-collection layout (params/moments/
+    ebuf per feature) restores bit-exact into the grouped state through
+    Trainer.restore_latest + dlrm.checkpoint_migrations."""
+    from repro.checkpoint import save_checkpoint
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(3), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=3), 16
+    )
+    tr = Trainer(
+        jax.jit(step, donate_argnums=(0,)), state, static, data,
+        ckpt_dir=str(tmp_path), migrations=dlrm.checkpoint_migrations(cfg),
+    )
+    tr.run(3)
+
+    # hand-write what a PR-2-era writer produced: per-feature emb trees
+    to_old, _ = dlrm.checkpoint_migrations(cfg)[0]
+    new_tree = {"state": tr.state, "clusters_done": np.int32(0)}
+    old_tree = to_old(new_tree)
+    # sanity: the legacy layout really is per-feature (one leaf per table)
+    assert len(old_tree["state"].params["emb"]) == cfg.n_sparse
+    save_checkpoint(str(tmp_path), 3, old_tree)
+
+    want = jax.tree.leaves(tr.state)
+    assert tr.restore_latest() == 3
+    for a, b in zip(jax.tree.leaves(tr.state), want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and training continues from the migrated state
+    tr.run(2)
+    assert np.isfinite(tr.history[-1]["loss"])
+
+
+def test_legacy_checkpoint_with_id_counts_and_trackerless_reader(tmp_path):
+    """Hardest migration case: the legacy writer ALSO checkpointed id
+    histograms, and the restoring Trainer has no tracker — the id_counts
+    wildcard placeholder must be sized against the CONVERTED (per-feature)
+    layout, not the grouped one."""
+    from repro.checkpoint import save_checkpoint
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.train.freq import IdFrequencyTracker
+    from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(7), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=7), 16
+    )
+    tr = Trainer(  # NO id_tracker
+        jax.jit(step, donate_argnums=(0,)), state, static, data,
+        ckpt_dir=str(tmp_path), migrations=dlrm.checkpoint_migrations(cfg),
+    )
+    tr.run(2)
+    to_old, _ = dlrm.checkpoint_migrations(cfg)[0]
+    old_tree = to_old({"state": tr.state, "clusters_done": np.int32(1)})
+    # the legacy writer's tracker state rides along
+    tracker = IdFrequencyTracker(cfg.vocab_sizes)
+    old_tree["id_counts"] = tracker.state_tree()
+    save_checkpoint(str(tmp_path), 2, old_tree)
+
+    want = jax.tree.leaves(tr.state)
+    assert tr.restore_latest() == 2
+    assert tr.clusters_done == 1
+    for a, b in zip(jax.tree.leaves(tr.state), want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_new_layout_checkpoint_still_restores(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(4), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=4), 16
+    )
+    tr = Trainer(
+        jax.jit(step, donate_argnums=(0,)), state, static, data,
+        ckpt_dir=str(tmp_path), migrations=dlrm.checkpoint_migrations(cfg),
+    )
+    tr.run(2)
+    save_checkpoint(str(tmp_path), 2, {"state": tr.state, "clusters_done": np.int32(0)})
+    want = jax.tree.leaves(tr.state)
+    assert tr.restore_latest() == 2
+    for a, b in zip(jax.tree.leaves(tr.state), want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- transition through the collection -------------------------------------
+
+
+def test_collection_transition_equals_per_table_transition():
+    """cluster_tables through the grouped layout produces EXACTLY the
+    tables/pointers the per-table loop would: slice per feature and
+    compare against transition_table run standalone."""
+    from repro.train.transition import transition_table
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    coll = cfg.collection
+    params, buffers = dlrm.init(jax.random.PRNGKey(5), cfg)
+    key = jax.random.PRNGKey(6)
+    p2, b2 = dlrm.cluster_tables(key, params, buffers, cfg)
+    per_p = coll.unstack_params(params["emb"])
+    per_b = coll.unstack_buffers(buffers["emb"])
+    for i in range(cfg.n_sparse):
+        t = cfg.table(i)
+        if not isinstance(t, CCE):
+            continue
+        want_p, want_b, _ = transition_table(
+            t, jax.random.fold_in(key, i), per_p[i], per_b[i],
+            chunk_size=cfg.emb_cluster_chunk,
+        )
+        got_p = coll.feature_params(p2["emb"], i)
+        got_b = coll.feature_buffers(b2["emb"], i)
+        np.testing.assert_array_equal(
+            np.asarray(got_p["tables"]), np.asarray(want_p["tables"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_b["ptr"]), np.asarray(want_b["ptr"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_b["hs"]), np.asarray(want_b["hs"])
+        )

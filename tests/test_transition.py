@@ -7,7 +7,11 @@
 * the Pallas ``kmeans_assign`` kernel route (interpret mode on CPU)
   matches the jnp path,
 * the shard_map'd distributed transition reproduces the serial one on a
-  1-device axis,
+  1-device axis, and runs both phases (weighted k-means + full-vocab
+  assignment) sharded on a forced 4-device host,
+* count-WEIGHTED k-means: a weighted Lloyd step equals the unweighted
+  step on the expanded multiset, and the transition feeds unique observed
+  ids + counts instead of a with-replacement sample,
 * restart-exact resume across a transition (params AND remapped moments).
 """
 import jax
@@ -132,6 +136,7 @@ def test_remap_opt_state_policies():
 
 def test_cluster_tables_remaps_and_resets():
     cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    coll = cfg.collection
     params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
     opt = jax.tree.map(
         lambda x: jnp.full_like(x, 0.5), sgd(momentum=0.9).init(params)
@@ -146,11 +151,11 @@ def test_cluster_tables_remaps_and_resets():
     )
     for i in range(cfg.n_sparse):
         if isinstance(cfg.table(i), CCE):
-            m = np.asarray(opt2["m"]["emb"][i]["tables"])
+            m = np.asarray(coll.feature_params(opt2["m"]["emb"], i)["tables"])
             assert float(np.abs(m[:, 1]).max()) == 0.0  # helper slab zeroed
             # per-id moment is 0.5 (main) + 0.5 (helper) = 1.0 everywhere, so
             # every non-empty cluster's remapped moment is exactly 1.0
-            ptr = np.asarray(b2["emb"][i]["ptr"])
+            ptr = np.asarray(coll.feature_buffers(b2["emb"], i)["ptr"])
             for col in range(ptr.shape[0]):
                 nonempty = np.unique(ptr[col])
                 np.testing.assert_allclose(m[col, 0, nonempty], 1.0, rtol=1e-6)
@@ -159,7 +164,8 @@ def test_cluster_tables_remaps_and_resets():
     )
     for i in range(cfg.n_sparse):
         if isinstance(cfg.table(i), CCE):
-            assert float(np.abs(np.asarray(opt3["m"]["emb"][i]["tables"])).max()) == 0.0
+            m3 = np.asarray(coll.feature_params(opt3["m"]["emb"], i)["tables"])
+            assert float(np.abs(m3).max()) == 0.0
 
 
 # --- frequency-weighted k-means sampling -------------------------------------
@@ -182,6 +188,155 @@ def test_id_frequency_tracker():
     tr2 = IdFrequencyTracker((10, 5))
     tr2.load_state_tree(tr.state_tree())
     np.testing.assert_array_equal(tr2.counts[0], tr.counts[0])
+
+
+def test_points_from_counts_is_weighted_not_sampled():
+    from repro.train.freq import points_from_counts
+
+    counts = np.array([0, 3, 0, 1, 5, 0])
+    ids, w = points_from_counts(counts, 10, seed=0)
+    np.testing.assert_array_equal(ids, [1, 3, 4])  # every observed id ONCE
+    np.testing.assert_array_equal(w, [3.0, 1.0, 5.0])  # counts ARE the weights
+    assert points_from_counts(np.zeros(4), 10, 0) is None  # uniform fallback
+    # over-cap: stratified, deterministic, unbiased — the head enters
+    # exactly, the uniform tail is Horvitz-Thompson-inflated
+    big = np.arange(100)  # id i observed i times; ids 96..99 are the head
+    ids1, w1 = points_from_counts(big, 10, seed=7)
+    ids2, w2 = points_from_counts(big, 10, seed=7)
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(w1, w2)
+    assert len(ids1) == len(np.unique(ids1)) == 10
+    head = np.arange(95, 100)  # top n/2 counts included with certainty
+    assert set(head) <= set(ids1)
+    lut = dict(zip(ids1, w1))
+    for i in head:
+        assert lut[i] == big[i]  # exact counts for the head
+    # tail: count * (|rest| / n_tail); 99 observed ids - 5 head = 94 rest
+    for i in set(ids1) - set(head):
+        np.testing.assert_allclose(lut[i], big[i] * 94 / 5)
+    # E[total weight] == total observed mass (unbiasedness, in expectation)
+    tots = [points_from_counts(big, 10, seed=s)[1].sum() for s in range(300)]
+    np.testing.assert_allclose(np.mean(tots), big.sum(), rtol=0.05)
+
+
+def test_weighted_lloyd_equals_multiset_lloyd():
+    """A weighted Lloyd iteration on unique points IS the unweighted
+    iteration on the multiset — the exact form of the epoch-boundary
+    sample that with-replacement draws only approximate."""
+    from repro.core import kmeans as km
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (12, 4))
+    w = jnp.asarray([3.0, 1, 2, 1, 1, 4, 1, 2, 1, 1, 5, 1])
+    c0 = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+    c_w, _, in_w = km._lloyd_step(x, c0, 3, weights=w)
+    c_d, _, in_d = km._lloyd_step(jnp.repeat(x, w.astype(int), axis=0), c0, 3)
+    np.testing.assert_allclose(np.asarray(c_w), np.asarray(c_d), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(in_w), float(in_d), rtol=1e-4)
+
+
+def test_weighted_kmeans_follows_the_mass():
+    """Centroids must track the weight, not the point count: many light
+    points vs one heavy point."""
+    from repro.core import kmeans as km
+
+    light = jax.random.normal(jax.random.PRNGKey(2), (63, 2)) * 0.05
+    heavy = jnp.array([[10.0, 10.0]])
+    x = jnp.concatenate([light, heavy])
+    w = jnp.concatenate([jnp.ones(63), jnp.asarray([1000.0])])
+    res = km.kmeans(jax.random.PRNGKey(3), x, 2, niter=20, weights=w)
+    d_heavy = np.linalg.norm(np.asarray(res.centroids) - np.array([10, 10]), axis=1)
+    assert d_heavy.min() < 0.1  # one centroid sits ON the heavy point
+
+
+def test_transition_uses_count_weighted_sample(cce_state, monkeypatch):
+    """With a histogram, cluster() must receive the UNIQUE observed ids
+    plus weights (not a with-replacement multiset)."""
+    from repro.train.transition import transition_table
+
+    cce, params, buffers = cce_state
+    counts = np.zeros(cce.d1)
+    counts[[7, 13, 99]] = [5, 1, 2]
+    seen = {}
+    orig = CCE.cluster
+
+    def spy(self, key, p, b, **kw):
+        seen.update(kw)
+        return orig(self, key, p, b, **kw)
+
+    monkeypatch.setattr(CCE, "cluster", spy)
+    transition_table(cce, jax.random.PRNGKey(0), params, buffers, counts=counts)
+    np.testing.assert_array_equal(np.asarray(seen["sample_ids"]), [7, 13, 99])
+    np.testing.assert_array_equal(np.asarray(seen["sample_weights"]), [5.0, 1.0, 2.0])
+
+
+# --- sharded full-vocab assignment (forced multi-device) ----------------------
+
+
+def test_assign_all_sharded_matches_serial_on_one_device(cce_state):
+    cce, params, buffers = cce_state
+    mesh = jax.make_mesh((1,), ("data",))
+    cents = jax.random.normal(jax.random.PRNGKey(1), (cce.c, cce.k, cce.dsub))
+    a_serial = cce.assign_all(params, buffers, cents, use_kernel=False)
+    a_shard = cce.assign_all_sharded(
+        params, buffers, cents, mesh, chunk_size=97, use_kernel=False
+    )
+    np.testing.assert_array_equal(np.asarray(a_serial), np.asarray(a_shard))
+
+
+@pytest.mark.slow
+def test_cluster_sharded_on_forced_four_device_host():
+    """The whole sharded transition — distributed weighted k-means AND the
+    sharded full-vocab assignment — on a real 4-device (forced host) mesh,
+    in a subprocess so the flag is set before jax initializes."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.cce import CCE
+
+        assert jax.device_count() == 4, jax.devices()
+        cce = CCE(d1=303, d2=16, k=8, c=2, seed_salt=1)
+        params, buffers = cce.init(jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(rng.integers(0, 303, 256))
+        w = jnp.asarray(rng.integers(1, 5, 256), jnp.float32)
+        p_s, b_s = cce.cluster_sharded(
+            jax.random.PRNGKey(3), params, buffers, mesh,
+            sample_ids=ids, sample_weights=w, chunk_size=50,
+        )
+        # after the transition the main table IS the centroids, so the
+        # sharded full-vocab assignment must reproduce a serial assign
+        # against them (up to float-tie flips)
+        cents = p_s["tables"][:, 0].astype(jnp.float32)
+        want = np.asarray(cce.assign_all(params, buffers, cents, use_kernel=False))
+        got = np.asarray(b_s["ptr"])
+        assert got.shape == want.shape == (2, 303)
+        assert (got == want).mean() > 0.99, (got != want).sum()
+        assert float(np.abs(np.asarray(p_s["tables"][:, 1])).max()) == 0.0
+        print("MULTIDEVICE-OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [os.path.join(os.path.dirname(__file__), "..", "src"),
+                      env.get("PYTHONPATH")])
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "MULTIDEVICE-OK" in r.stdout
 
 
 # --- the Trainer protocol ----------------------------------------------------
@@ -227,7 +382,9 @@ def test_trainer_threads_opt_through_transition():
     assert tr.clusters_done == 1
     for i in range(cfg.n_sparse):
         if isinstance(cfg.table(i), CCE):
-            m = np.asarray(tr.state.opt["m"]["emb"][i]["tables"])
+            m = np.asarray(
+                cfg.collection.feature_params(tr.state.opt["m"]["emb"], i)["tables"]
+            )
             assert float(np.abs(m[:, 1]).max()) == 0.0  # no stale helper moments
 
 
