@@ -10,6 +10,11 @@ additionally benches the EmbeddingCollection refactor end-to-end: a
 26-feature DLRM embedding step, legacy per-feature loop vs grouped
 supertables, launches-per-step counted, results written to
 ``BENCH_collection.json`` (uploaded as a CI artifact).
+
+``--stream`` benches the streaming-statistics subsystem: dense vs sketch
+frequency tracker memory (at the real Criteo vocabularies) and observe()
+throughput (sync conservative vs async device path), written to
+``BENCH_stream.json`` (also a CI artifact).
 """
 import json
 import time
@@ -213,14 +218,145 @@ def bench_collection(out=print, json_path="BENCH_collection.json",
     return result
 
 
+def bench_stream(out=print, json_path="BENCH_stream.json",
+                 batch=4096, n_batches=32):
+    """Dense vs sketch frequency tracker: state memory and observe()
+    throughput (the streaming-statistics subsystem's structural claim —
+    DESIGN.md §5).
+
+    Memory is measured at the REAL Criteo vocabularies (the dense
+    tracker's cost is what it would be in production; its arrays are
+    lazily-zero so allocating them is safe to measure, the sketch is
+    measured live).  Throughput runs on a capped-vocab Zipf stream: dense
+    ``np.add.at`` vs sketch conservative update vs the async device path
+    (jitted segment-sum + background fold — the number that matters is
+    the HOT-PATH cost, i.e. how long ``observe`` blocks the step loop;
+    the fold drains off-thread and is charged separately via flush).
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs import dlrm_criteo
+    from repro.models import dlrm
+    from repro.models.dlrm import DLRMConfig
+    from repro.stream import IdFrequencyTracker
+
+    # --- memory at full Criteo scale (no data needed; async_fold off —
+    # the tracker is read once for nbytes, no folder thread/jit needed) --
+    full_cfg = dlrm_criteo.CONFIG
+    sketch_full = dlrm.make_id_tracker(
+        full_cfg, dataclasses.replace(dlrm_criteo.STREAM, async_fold=False)
+    )
+    dense_bytes = sum(v * 8 for v in full_cfg.vocab_sizes)  # int64 per row
+    mem = {
+        "vocab_rows": int(sum(full_cfg.vocab_sizes)),
+        "dense_bytes": dense_bytes,
+        "sketch_bytes": int(sketch_full.nbytes),
+        "ratio": dense_bytes / max(1, sketch_full.nbytes),
+        "stream_config": dataclasses.asdict(dlrm_criteo.STREAM),
+    }
+
+    # --- update throughput on a Zipf stream (capped vocabs) ---------------
+    vocabs = tuple(min(v, 100_000) for v in dlrm_criteo.CRITEO_KAGGLE_VOCABS)
+    cfg = DLRMConfig(vocab_sizes=vocabs, emb_method="cce", emb_param_cap=2048)
+    rng = np.random.default_rng(0)
+    batches = [
+        {"sparse": np.stack(
+            [rng.zipf(1.2, batch) % v for v in vocabs], axis=1
+        ).astype(np.int64)}
+        for _ in range(n_batches)
+    ]
+
+    def run(tracker):
+        tracker.observe(batches[0])  # warm (jit compile on the async path)
+        getattr(tracker, "flush", lambda: None)()
+        t0 = time.perf_counter()
+        for b in batches:
+            tracker.observe(b)
+        hot = time.perf_counter() - t0
+        getattr(tracker, "flush", lambda: None)()
+        return hot, time.perf_counter() - t0
+
+    stream_cfg = dlrm_criteo.reduced_stream(window=0)
+    hot_dense, _ = run(IdFrequencyTracker(vocabs))
+    hot_sketch, _ = run(dlrm.make_id_tracker(cfg, stream_cfg))
+    hot_async, total_async = run(
+        dlrm.make_id_tracker(
+            cfg, dataclasses.replace(stream_cfg, async_fold=True)
+        )
+    )
+    # the async design's structural claim: the hot path is ONE jitted
+    # dispatch + an enqueue.  Measure the dispatch alone (few in flight,
+    # so the device queue never backs up) — on a real accelerator this is
+    # the whole hot-path cost; on CPU the "device" is the host, so the
+    # sustained async numbers above contend with the fold thread for the
+    # same cores and understate the design.
+    async_tr = dlrm.make_id_tracker(
+        cfg, dataclasses.replace(stream_cfg, async_fold=True)
+    )
+    cols = np.ascontiguousarray(
+        batches[0]["sparse"][:, list(async_tr.tracked)]
+    )
+    jcols = jnp.asarray(cols, jnp.int32)
+    jax.block_until_ready(async_tr._cell_counter(jcols))
+    t0 = time.perf_counter()
+    for _ in range(8):
+        async_tr._cell_counter(jcols)
+    dispatch_us = (time.perf_counter() - t0) / 8 * 1e6
+
+    ids_per_batch = batch * len(vocabs)
+    thr = {
+        "batch": batch,
+        "n_features": len(vocabs),
+        "ids_per_batch": ids_per_batch,
+        "observe_us_per_batch": {
+            "dense": hot_dense / n_batches * 1e6,
+            "sketch_sync": hot_sketch / n_batches * 1e6,
+            "sketch_async_hot_path": hot_async / n_batches * 1e6,
+            "sketch_async_with_fold": total_async / n_batches * 1e6,
+            "async_dispatch_only": dispatch_us,
+        },
+        "ids_per_sec_hot_path": {
+            "dense": ids_per_batch * n_batches / hot_dense,
+            "sketch_sync": ids_per_batch * n_batches / hot_sketch,
+            "sketch_async": ids_per_batch * n_batches / hot_async,
+        },
+    }
+    result = {
+        "backend": jax.default_backend(),
+        "note": ("on CPU the 'device' is the host: sustained async numbers "
+                 "contend with the fold thread for the same cores; "
+                 "async_dispatch_only is the structural hot-path cost"),
+        "memory": mem,
+        "throughput": thr,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out(f"memory: dense {dense_bytes / 1e6:.0f} MB vs sketch "
+        f"{mem['sketch_bytes'] / 1e6:.1f} MB ({mem['ratio']:.0f}x) over "
+        f"{mem['vocab_rows']} vocab rows")
+    out("observe us/batch: " + json.dumps(
+        {k: round(v) for k, v in thr["observe_us_per_batch"].items()}))
+    out(f"wrote {json_path}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--collection", action="store_true",
                     help="only the looped-vs-fused collection bench")
-    ap.add_argument("--json", default="BENCH_collection.json")
+    ap.add_argument("--stream", action="store_true",
+                    help="only the dense-vs-sketch tracker bench")
+    ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if not args.collection:
+    if args.stream:
+        bench_stream(json_path=args.json or "BENCH_stream.json")
+    elif args.collection:
+        bench_collection(json_path=args.json or "BENCH_collection.json")
+    else:
         main()
-    bench_collection(json_path=args.json)
+        bench_collection(json_path=args.json or "BENCH_collection.json")
+        bench_stream(json_path="BENCH_stream.json")

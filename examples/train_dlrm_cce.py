@@ -1,7 +1,11 @@
 """End-to-end driver: train DLRM with CCE-compressed tables on the
 synthetic Criteo-like clickstream for a few hundred steps, with
-checkpointing, clustering interleaved (the paper's training recipe), an
-injected failure, and restart-exact recovery.
+checkpointing, sketch-based frequency tracking (count-min + heavy
+hitters at vocab-independent memory, device-side async updates),
+ENTROPY/DRIFT-TRIGGERED clustering (the adaptive form of the paper's
+interleaved recipe — a periodic fallback schedule stays on), an injected
+failure, and restart-exact recovery.  Every trigger evaluation is logged
+(entropy, drift, fired-or-not) so the adaptive schedule is observable.
 
 Run:  PYTHONPATH=src python examples/train_dlrm_cce.py [--steps 300]
 """
@@ -16,7 +20,7 @@ from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
 from repro.optim import sgd
-from repro.train.freq import IdFrequencyTracker
+from repro.stream import ClusterTrigger
 from repro.train.loop import (
     FailureInjector, Trainer, init_state, make_train_step, merge_buffers,
     split_buffers,
@@ -44,7 +48,16 @@ def main():
     state = init_state(params, opt, dyn)
     data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0)
 
-    tracker = IdFrequencyTracker(cfg.vocab_sizes)
+    # sketch-backed tracking (only the CCE features carry sketches) with
+    # async device-side updates, windowed for the adaptive trigger
+    tracker = dlrm.make_id_tracker(
+        cfg, dlrm_criteo.reduced_stream(window=max(4, args.steps // 20),
+                                        async_fold=True),
+    )
+    trigger = ClusterTrigger(entropy_drop=0.1, drift_threshold=0.25, warmup=2)
+    print(f"sketch tracker: {tracker.nbytes / 1e3:.0f} kB for vocabs "
+          f"{cfg.vocab_sizes} (dense histograms would be "
+          f"{sum(cfg.vocab_sizes) * 8 / 1e3:.0f} kB)")
 
     def cluster_fn(key, p, b, opt_state):
         return dlrm.cluster_tables(key, p, b, cfg, opt_state,
@@ -58,7 +71,8 @@ def main():
         clickstream_batches(data_cfg, args.batch),
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         cluster_fn=cluster_fn, cluster_every=args.steps // 4, cluster_max=3,
-        id_tracker=tracker, failures=FailureInjector((fail_step,)),
+        id_tracker=tracker, trigger=trigger,
+        failures=FailureInjector((fail_step,)),
         migrations=dlrm.checkpoint_migrations(cfg),
     )
 
@@ -73,12 +87,19 @@ def main():
             data_cfg, args.batch, start_step=restored)
         trainer.run(args.steps - restored)
 
+    print("trigger log (one line per closed window):")
+    for ev in trigger.events:
+        mark = f"FIRED ({ev.reason})" if ev.fire else "held"
+        print(f"  step {ev.step:4d}  entropy {ev.entropy:6.3f}  "
+              f"drift {ev.drift:5.3f}  {mark}")
+
     losses = [h["loss"] for h in trainer.history]
     test = next(clickstream_batches(data_cfg, 2048, host_id=1, n_hosts=2))
     buffers = merge_buffers(trainer.state.ebuf, trainer.static_buffers)
     bce = float(dlrm.bce_loss(trainer.state.params, buffers, cfg, test))
     print(f"train loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}; "
-          f"test BCE {bce:.4f}; clusterings {trainer.clusters_done}; "
+          f"test BCE {bce:.4f}; clusterings {trainer.clusters_done} "
+          f"({trigger.fired} trigger-fired); "
           f"stragglers flagged {len(trainer.monitor.flagged)}")
 
 

@@ -64,6 +64,15 @@ def save_checkpoint(directory: str, step: int, tree: Pytree, *, extra: dict | No
         "extra": extra or {},
         "leaves": [],
     }
+    if isinstance(tree, dict):
+        # top-level section index: per-key leaf counts, in jax's dict
+        # flatten order (sorted keys).  Lets a differently-configured
+        # reader align optional host-state sections (id_counts, trigger)
+        # by NAME — dropping departed sections and defaulting new ones —
+        # instead of leaf-count arithmetic over the whole tree.
+        manifest["toplevel"] = [
+            [k, len(jax.tree.leaves(tree[k]))] for k in sorted(tree)
+        ]
     for i, leaf in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
@@ -92,6 +101,52 @@ def list_checkpoints(directory: str) -> list[tuple[int, str]]:
         if name.startswith("step_") and os.path.exists(os.path.join(p, _COMMIT)):
             out.append((int(name.split("_")[1]), p))
     return sorted(out)
+
+
+def _shapes_match(t_leaves, stored) -> bool:
+    """Template-vs-stored leaf compatibility: equal count, equal shapes —
+    except zero-size template leaves, which are wildcards (they absorb a
+    stored leaf of any shape)."""
+    return len(t_leaves) == len(stored) and not any(
+        hasattr(t, "shape")
+        and np.size(t) > 0
+        and tuple(t.shape) != tuple(l.shape)
+        for t, l in zip(t_leaves, stored)
+    )
+
+
+def _align_toplevel(tmpl: Pytree, leaves, toplevel, *, allow_drop: bool) -> Pytree | None:
+    """Section-aware restore for top-level dict trees: align stored leaf
+    runs to template keys by NAME.  With ``allow_drop``, stored sections
+    the template lacks are dropped (a departed writer's id histograms);
+    template keys the store lacks keep the template's value (fresh state
+    — how a pre-trigger checkpoint restores into a trigger-enabled
+    Trainer).  Returns None when any shared section's leaves don't fit
+    the template, or (without ``allow_drop``) when a stored section goes
+    unconsumed — the caller tries drop-free candidates first so a
+    candidate that merely discards data never shadows one that migrates
+    it."""
+    if not isinstance(tmpl, dict):
+        return None
+    stored: dict[str, list] = {}
+    off = 0
+    for k, n in toplevel:
+        stored[k] = leaves[off : off + n]
+        off += n
+    if off != len(leaves):
+        return None  # corrupt/foreign section index
+    if not allow_drop and any(k not in tmpl for k in stored):
+        return None
+    out = {}
+    for k, sub in tmpl.items():
+        if k not in stored:
+            out[k] = sub
+            continue
+        s_leaves, s_def = jax.tree.flatten(sub)
+        if not _shapes_match(s_leaves, stored[k]):
+            return None
+        out[k] = jax.tree.unflatten(s_def, stored[k])
+    return out
 
 
 def load_checkpoint(directory: str, *, step: int | None = None,
@@ -134,27 +189,35 @@ def load_checkpoint(directory: str, *, step: int | None = None,
     )
     if not candidates:
         raise ValueError("pass template= to reconstruct the tree structure")
+    toplevel = manifest.get("toplevel")
     err: Exception | None = None
-    for tmpl, convert in candidates:
-        t_leaves, treedef = jax.tree.flatten(tmpl)
-        if len(t_leaves) != len(leaves):
-            err = err or ValueError(
-                f"leaf count mismatch: checkpoint has {len(leaves)}, "
-                f"template has {len(t_leaves)}"
-            )
-            continue
-        if any(
-            hasattr(t, "shape")
-            and np.size(t) > 0  # zero-size leaf: wildcard placeholder
-            and tuple(t.shape) != tuple(l.shape)
-            for t, l in zip(t_leaves, leaves)
-        ):
-            err = err or ValueError("leaf shapes do not match this layout template")
-            continue
-        tree = jax.tree.unflatten(treedef, leaves)
-        if convert is not None:
-            tree = convert(tree)
-        return manifest["step"], tree, manifest.get("extra", {})
+    # two passes: exact whole-tree and drop-free section alignment first,
+    # then alignments that DISCARD stored sections — so a candidate that
+    # merely drops data never wins over a later one that migrates it
+    for allow_drop in (False, True):
+        for tmpl, convert in candidates:
+            t_leaves, treedef = jax.tree.flatten(tmpl)
+            if not allow_drop and _shapes_match(t_leaves, leaves):
+                tree = jax.tree.unflatten(treedef, leaves)
+            elif toplevel is not None:
+                # whole-tree match failed (e.g. an optional host-state
+                # section appeared or departed): align by section name
+                tree = _align_toplevel(tmpl, leaves, toplevel,
+                                       allow_drop=allow_drop)
+                if tree is None:
+                    err = err or ValueError(
+                        "stored sections do not fit this layout template"
+                    )
+                    continue
+            else:
+                err = err or ValueError(
+                    f"leaf count/shape mismatch: checkpoint has {len(leaves)} "
+                    f"leaves, template has {len(t_leaves)}"
+                )
+                continue
+            if convert is not None:
+                tree = convert(tree)
+            return manifest["step"], tree, manifest.get("extra", {})
     raise err  # no candidate layout matched
 
 

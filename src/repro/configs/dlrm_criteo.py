@@ -7,6 +7,7 @@ At full scale the 26 tables hold ~540M embedding rows; the CCE cap below
 reproduces the paper's compressed operating point.
 """
 from repro.models.dlrm import DLRMConfig
+from repro.stream import StreamConfig
 
 # Criteo Kaggle vocab sizes (the published counts, descending spread)
 CRITEO_KAGGLE_VOCABS = (
@@ -26,6 +27,22 @@ CONFIG = DLRMConfig(
 )
 
 
+# Streaming frequency statistics at Criteo scale (DESIGN.md §5): the
+# dense tracker would hold one int64 per vocab row (~270 MB over the 26
+# Kaggle features, and ~6.4 GB at Terabyte scale — a second full-vocab
+# array, defeating CCE's point); the sketch tracker holds
+# O(width·depth + heavy + ring) per CCE feature (~13 MB total here)
+# REGARDLESS of vocabulary.  The head is exact (4096 heavy hitters per
+# feature); the 16k-cell conservative-update rows only have to rank the
+# tail.  One window ≈ 256 batches; decay 0.95/window ≈ a half-life of
+# ~13 windows, so the histogram tracks the recent stream and the
+# entropy/drift trigger can see shift.
+STREAM = StreamConfig(
+    width=1 << 14, depth=4, heavy=4096, ring=1 << 14,
+    decay=0.95, window=256, async_fold=True,
+)
+
+
 def reduced(emb_method: str = "cce", cap: int = 512) -> DLRMConfig:
     """Small synthetic-Criteo config for CPU training runs."""
     return DLRMConfig(
@@ -36,4 +53,14 @@ def reduced(emb_method: str = "cce", cap: int = 512) -> DLRMConfig:
         top_mlp=(64, 1),
         emb_method=emb_method,
         emb_param_cap=cap,
+    )
+
+
+def reduced_stream(window: int = 8, *, async_fold: bool = False) -> StreamConfig:
+    """Sketch-tracker shape matched to ``reduced()``'s vocabs — big enough
+    that head+tail statistics are faithful at CPU test scale, small enough
+    to stay obviously vocab-independent."""
+    return StreamConfig(
+        width=1 << 11, depth=4, heavy=128, ring=2048,
+        decay=0.9, window=window, async_fold=async_fold,
     )

@@ -197,6 +197,29 @@ def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
     )
 
 
+def make_id_tracker(cfg: DLRMConfig, stream=None, *, key: str = "sparse"):
+    """The frequency tracker the Trainer/transition pair consumes.
+
+    ``stream=None`` returns the DENSE reference tracker (one int64 per
+    vocab row — exact, but a second full-vocab array per feature).  A
+    ``repro.stream.StreamConfig`` returns the sketch-backed tracker at
+    vocab-independent memory, wired through the collection: only the
+    features that actually transition (the CCE groups) carry sketches —
+    full/loop tables never cluster, so their histograms would be dead
+    weight.  Either tracker plugs into ``Trainer(id_tracker=...)`` and
+    ``cluster_tables(id_counts=tracker.counts)`` unchanged."""
+    from repro.stream import IdFrequencyTracker, SketchFrequencyTracker
+
+    if stream is None:
+        return IdFrequencyTracker(cfg.vocab_sizes, key=key)
+    tracked = tuple(
+        i for g in cfg.collection.groups if g.kind == "cce" for i in g.features
+    )
+    return SketchFrequencyTracker(
+        cfg.vocab_sizes, stream, tracked=tracked, key=key
+    )
+
+
 def checkpoint_migrations(cfg: DLRMConfig):
     """``Trainer(migrations=...)`` entry for pre-collection checkpoints:
     restores the legacy per-feature emb layout bit-exact into the grouped

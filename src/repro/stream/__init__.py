@@ -1,0 +1,25 @@
+"""Streaming frequency statistics for the clustering transition.
+
+The layer between the data stream and the transition (DESIGN.md §5):
+sketch-based per-feature frequency tracking at vocab-independent memory
+(``sketch``), the tracker + windowing/decay semantics (``tracker``), the
+entropy/drift-triggered adaptive transition schedule (``trigger``), the
+device-side async update path (``device``), and the k-means point-set
+construction both the dense and sketched trackers share (``points``).
+"""
+from repro.stream.points import (  # noqa: F401
+    points_from_counts,
+    sample_from_counts,
+    stratified_points,
+)
+from repro.stream.sketch import (  # noqa: F401
+    CountMinSketch,
+    FeatureSketch,
+    SpaceSaving,
+)
+from repro.stream.tracker import (  # noqa: F401
+    IdFrequencyTracker,
+    SketchFrequencyTracker,
+    StreamConfig,
+)
+from repro.stream.trigger import ClusterTrigger, TriggerEvent  # noqa: F401

@@ -1,0 +1,92 @@
+"""Device-side batch sketch updates + asynchronous host fold.
+
+The host conservative-update path costs O(batch · depth) numpy work per
+step IN the training loop; at pod batch sizes that serializes against
+the jitted step.  This module removes tracking from the critical path:
+
+  * ``make_cell_counter`` builds ONE jitted function for all tracked
+    features: hash every id of the (B, F_tracked) sparse block with each
+    feature's multiply-shift coefficients (the SAME coefficients the
+    host sketch uses, so device cells == host cells) and segment-sum the
+    hits into an (F_tracked, depth, width) increment tensor — one
+    scatter-add launch, dispatched asynchronously by jax like any other
+    step work.
+  * ``AsyncFolder`` drains (device_delta, host_ids) pairs on a single
+    background thread: the ``device_get`` of the delta and the
+    O(unique-ids) head/ring bookkeeping block the FOLD thread, never the
+    step.  ``flush()`` is the barrier the tracker takes before sampling,
+    statistics, or checkpointing — fold order is FIFO, so flushed state
+    is a pure function of the observed batch sequence and restart-exact
+    resume holds with the async path enabled.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_cell_counter(sketches):
+    """Jitted (B, F) int32 -> (F, depth, width) int32 cell-increment
+    counter over ``sketches`` (the tracked features' ``CountMinSketch``
+    objects, which must share width/depth — one ``StreamConfig`` builds
+    them, so they do)."""
+    widths = {s.width for s in sketches}
+    depths = {s.depth for s in sketches}
+    if len(widths) != 1 or len(depths) != 1:
+        raise ValueError("tracked sketches must share width/depth")
+    (width,), (depth,) = widths, depths
+    n_feat = len(sketches)
+    a = jnp.asarray(np.stack([s.a for s in sketches]))  # (F, depth) uint32
+    b = jnp.asarray(np.stack([s.b for s in sketches]))
+    shift = int(sketches[0].shift)
+
+    @jax.jit
+    def count_cells(sparse):  # (B, F) int32
+        x = sparse.T.astype(jnp.uint32)  # (F, B)
+        cells = (a[:, :, None] * x[:, None, :] + b[:, :, None]) >> shift
+        # one flat scatter-add across every (feature, row) plane
+        base = jnp.arange(n_feat * depth, dtype=jnp.uint32)[:, None] * width
+        flat = (cells.reshape(n_feat * depth, -1) + base).reshape(-1)
+        delta = jnp.zeros(n_feat * depth * width, jnp.int32).at[
+            flat.astype(jnp.int32)
+        ].add(1)
+        return delta.reshape(n_feat, depth, width)
+
+    return count_cells
+
+
+class AsyncFolder:
+    """FIFO background folder with error propagation on the barrier."""
+
+    def __init__(self, fold_fn, maxsize: int = 64):
+        self._fold = fold_fn
+        self._q: queue.Queue = queue.Queue(maxsize=maxsize)
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if self._error is None:  # after an error, drain without work
+                    self._fold(item)
+            except BaseException as e:  # surfaced on the next flush()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, item) -> None:
+        if self._error is not None:
+            self.flush()  # raises
+        self._q.put(item)  # bounded: backpressure instead of unbounded lag
+
+    def flush(self) -> None:
+        self._q.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

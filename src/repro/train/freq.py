@@ -1,108 +1,13 @@
-"""Observed-id frequency tracking for the clustering transition.
+"""Compat shim — frequency tracking moved to ``repro.stream``.
 
-The paper clusters at epoch boundaries, so its k-means sample is drawn
-from the *data stream* — ids appear proportionally to their frequency.
-A uniform sample over the vocabulary (the seed behavior) is a different
-algorithm on Zipf-distributed data: the never-seen tail dominates the
-sample, k-means spends its centroids separating untrained init noise,
-and the transition destroys more signal than it frees — measurably
-turning Algorithm 3's gain into a regression on the system test.
-
-``IdFrequencyTracker`` restores the paper's sampling distribution for
-streaming (epoch-less) pipelines: the Trainer feeds it every batch, the
-transition draws its k-means sample from the empirical histogram.  Counts
-are plain numpy (host-side, like the pointer tables on a pod) and ride
-the checkpoint so resume keeps the same sampling distribution.
+The dense ``IdFrequencyTracker`` and the point-set helpers now live in
+the streaming-statistics subsystem (``repro/stream/``, DESIGN.md §5)
+alongside the sketch-backed tracker that replaces the dense histograms
+at production vocab sizes.  Import from ``repro.stream``; this module
+keeps the historical import path working.
 """
-from __future__ import annotations
-
-from typing import Sequence
-
-import numpy as np
-
-
-def sample_from_counts(counts: np.ndarray, n: int, seed: int) -> np.ndarray | None:
-    """Draw ``n`` ids ~ ``counts`` (with replacement — duplicates ARE the
-    frequency weighting, exactly what an epoch-boundary sample would
-    contain).  None when nothing has been counted yet (callers fall back
-    to uniform).  Kept for diagnostics/ablation; the transition now uses
-    ``points_from_counts`` (the zero-variance weighted form)."""
-    counts = np.asarray(counts)
-    total = int(counts.sum())
-    if total == 0:
-        return None
-    rng = np.random.default_rng(seed)
-    return rng.choice(counts.shape[0], size=n, replace=True, p=counts / total)
-
-
-def points_from_counts(
-    counts: np.ndarray, n: int, seed: int
-) -> tuple[np.ndarray, np.ndarray] | None:
-    """(ids, weights) for COUNT-WEIGHTED k-means: every observed id exactly
-    once, weighted by its observed frequency.
-
-    The with-replacement draw in ``sample_from_counts`` is an unbiased but
-    noisy estimate of this — a weighted Lloyd iteration on unique points
-    IS the iteration on the epoch-boundary multiset, with no sampling
-    variance and no duplicated materialization work.  None when nothing
-    has been counted yet (uniform fallback).
-
-    When more than ``n`` distinct ids were observed (the FAISS-style cap
-    still bounds the k-means cost), the subsample is STRATIFIED and
-    unbiased: the n/2 highest-count ids enter deterministically with their
-    exact counts (inclusion probability 1), and the tail is sampled
-    uniformly without replacement with counts inflated by the inverse
-    sampling fraction (Horvitz-Thompson).  Sampling the tail ∝ counts and
-    ALSO weighting by counts would double-count frequency (head mass
-    ~count²); uniform-only sampling risks dropping the head entirely —
-    this keeps the estimator unbiased for the weighted objective at low
-    variance where the mass actually is.
-    """
-    counts = np.asarray(counts)
-    nz = np.flatnonzero(counts)
-    if nz.size == 0:
-        return None
-    if nz.size <= n:
-        return nz, counts[nz].astype(np.float32)
-    n_head = n // 2
-    order = np.argsort(counts[nz], kind="stable")[::-1]
-    head = nz[order[:n_head]]
-    rest = nz[order[n_head:]]
-    rng = np.random.default_rng(seed)
-    n_tail = n - n_head
-    tail = rng.choice(rest, size=n_tail, replace=False)
-    w = np.concatenate(
-        [counts[head], counts[tail] * (rest.size / n_tail)]
-    ).astype(np.float32)
-    ids = np.concatenate([head, tail])
-    order = np.argsort(ids, kind="stable")
-    return ids[order], w[order]
-
-
-class IdFrequencyTracker:
-    """Per-feature id histograms from the training stream."""
-
-    def __init__(self, vocab_sizes: Sequence[int], key: str = "sparse"):
-        self.key = key
-        self.counts = [np.zeros(v, np.int64) for v in vocab_sizes]
-
-    def observe(self, batch: dict) -> None:
-        """Accumulate one (un-reshaped) batch: ``batch[self.key]`` is
-        (B, n_features) int.  Runs on the training hot path, so the
-        update is O(batch) — never O(vocab) (a full-vocab bincount per
-        step would dwarf the step itself on 100M-row tables)."""
-        sparse = np.asarray(batch[self.key]).reshape(-1, len(self.counts))
-        for f, c in enumerate(self.counts):
-            np.add.at(c, sparse[:, f], 1)
-
-    def sample_ids(self, seed: int, feature: int, n: int) -> np.ndarray | None:
-        """Draw ``n`` ids ~ the observed frequency of ``feature``."""
-        return sample_from_counts(self.counts[feature], n, seed)
-
-    # --- checkpoint integration (host state must resume too) -----------------
-
-    def state_tree(self) -> list[np.ndarray]:
-        return [c.copy() for c in self.counts]
-
-    def load_state_tree(self, tree: Sequence[np.ndarray]) -> None:
-        self.counts = [np.asarray(c).astype(np.int64).copy() for c in tree]
+from repro.stream import (  # noqa: F401
+    IdFrequencyTracker,
+    points_from_counts,
+    sample_from_counts,
+)

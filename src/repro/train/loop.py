@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -265,6 +266,7 @@ class Trainer:
         cluster_every: int = 0,
         cluster_max: int = 0,
         id_tracker=None,
+        trigger=None,
         accum: int = 1,
         monitor: StragglerMonitor | None = None,
         failures: FailureInjector | None = None,
@@ -284,6 +286,20 @@ class Trainer:
         self.cluster_every = cluster_every
         self.cluster_max = cluster_max
         self.id_tracker = id_tracker  # feeds the transition's k-means sample
+        # adaptive schedule: a repro.stream.ClusterTrigger evaluated on
+        # every closed tracker window — fires the SAME transition the
+        # periodic schedule does (both can be active; cluster_max caps
+        # their union).  Requires a windowed tracker (poll_window).
+        self.trigger = trigger
+        if trigger is not None:
+            windowed = getattr(id_tracker, "poll_window", None) is not None
+            window = getattr(getattr(id_tracker, "config", None), "window", None)
+            if not windowed or window == 0:
+                warnings.warn(
+                    "Trainer(trigger=...) needs a windowed tracker "
+                    "(SketchFrequencyTracker with StreamConfig(window>0)); "
+                    "the adaptive schedule will never evaluate"
+                )
         self.clusters_done = 0
         self.accum = accum
         self.monitor = monitor or StragglerMonitor()
@@ -291,8 +307,13 @@ class Trainer:
         self.seed = seed
         # (to_old, to_new) template/convert pairs for checkpoints written
         # under older state layouts (e.g. dlrm.checkpoint_migrations for
-        # pre-collection per-feature emb trees)
-        self.migrations = tuple(migrations)
+        # pre-collection per-feature emb trees).  Trackers contribute
+        # their own (the sketch tracker restores legacy DENSE id_counts
+        # by ingesting the histograms — exact on the head ids).
+        tracker_migrations = getattr(id_tracker, "checkpoint_migrations", None)
+        self.migrations = tuple(migrations) + (
+            tuple(tracker_migrations()) if tracker_migrations else ()
+        )
         self.history: list[dict] = []
 
     def _reshape_accum(self, batch):
@@ -320,12 +341,30 @@ class Trainer:
             self.history.append({k: float(v) for k, v in metrics.items()} | {"step": step})
 
             new_step = step + 1
-            if (
-                self.cluster_fn is not None
-                and self.cluster_every
-                and new_step % self.cluster_every == 0
-                and (not self.cluster_max or self.clusters_done < self.cluster_max)
-            ):
+            # adaptive schedule: a windowed tracker snapshots statistics
+            # at window close; the trigger turns them into a fire/hold
+            # decision.  Deterministic given the batch stream + restored
+            # trigger state, so resume replays the schedule exactly.
+            can_cluster = self.cluster_fn is not None and (
+                not self.cluster_max or self.clusters_done < self.cluster_max
+            )
+            triggered = False
+            if self.id_tracker is not None and self.trigger is not None:
+                poll = getattr(self.id_tracker, "poll_window", None)
+                stats = poll() if poll is not None else None
+                if stats is not None:
+                    # the availability gate rides INTO the trigger: a fire
+                    # that cannot run a transition must not commit
+                    # fire-state (reference reset, spacing counter)
+                    triggered = self.trigger.update(
+                        stats, step=new_step, can_fire=can_cluster
+                    ).fire
+            periodic = bool(
+                self.cluster_every and new_step % self.cluster_every == 0
+            )
+            if can_cluster and (periodic or triggered):
+                if self.id_tracker is not None:  # async folds must land
+                    getattr(self.id_tracker, "flush", lambda: None)()
                 key = jax.random.fold_in(jax.random.PRNGKey(self.seed), new_step)
                 buffers = merge_buffers(self.state.ebuf, self.static_buffers)
                 if self._cluster_takes_opt:
@@ -364,6 +403,10 @@ class Trainer:
         tree = {"state": self.state, "clusters_done": np.int32(self.clusters_done)}
         if self.id_tracker is not None:
             tree["id_counts"] = self.id_tracker.state_tree()
+        if self.trigger is not None:
+            # trigger state is training state too: resuming without it
+            # would re-arm the entropy reference and replay fires
+            tree["trigger"] = self.trigger.state_tree()
         return tree
 
     def _stored_n_leaves(self):
@@ -400,7 +443,26 @@ class Trainer:
         current config's layout, then the layouts a differently-configured
         writer could have produced (tracker-less: no id_counts; pre-
         transition-subsystem: state only)."""
-        templates = [self._ckpt_tree()]
+        # template forms, not live state (no _ckpt_tree: that would copy
+        # and flush the full live tracker only to be overwritten here):
+        # a sectioned checkpoint MISSING one of these sections restores
+        # the template value, so templates must be deterministic fresh
+        # state (and the trigger's prev-head leaves become zero-size
+        # wildcards — the stored row count depends on whether the WRITER
+        # had closed a window yet)
+        cur = {"state": self.state, "clusters_done": np.int32(self.clusters_done)}
+        if self.id_tracker is not None:
+            tmpl = getattr(self.id_tracker, "state_template", None)
+            cur["id_counts"] = tmpl() if tmpl else self.id_tracker.state_tree()
+        if self.trigger is not None:
+            cur["trigger"] = self.trigger.state_template()
+        templates = [cur]
+        if self.trigger is not None:
+            # writer predates the trigger (sectioned checkpoints align
+            # this by name; the variant covers pre-section writers)
+            templates.append(
+                {k: v for k, v in cur.items() if k != "trigger"}
+            )
         base = {"state": self.state, "clusters_done": np.int32(0)}
         if self.id_tracker is not None:
             templates.append(base)  # writer had no tracker
@@ -419,8 +481,26 @@ class Trainer:
         # one and restore through its converter (checkpoint.load_checkpoint
         # picks the first candidate whose leaves match).  The id_counts
         # placeholder is re-sized against each CONVERTED template — legacy
-        # layouts have different leaf counts.
-        for to_old, to_new in self.migrations:
+        # layouts have different leaf counts.  Migrations also COMPOSE
+        # pairwise: a checkpoint can be old along two independent axes at
+        # once (pre-collection emb layout AND dense id_counts) — each
+        # to_old chains on the other's template, converts apply in
+        # reverse, so the combined-legacy layout restores too.
+        pairs = list(self.migrations)
+        for a_old, a_new in self.migrations:
+            for b_old, b_new in self.migrations:
+                if b_old is a_old:
+                    continue
+
+                def chained_old(t, ao=a_old, bo=b_old):
+                    return bo(ao(t))
+
+                def chained_new(tree, an=a_new, bn=b_new):
+                    tree = bn(tree) if bn is not None else tree
+                    return an(tree) if an is not None else tree
+
+                pairs.append((chained_old, chained_new))
+        for to_old, to_new in pairs:
             for t in templates:
                 old_t = to_old(t)
                 candidates.append((old_t, to_new))
@@ -430,6 +510,41 @@ class Trainer:
         step, tree, _ = load_checkpoint(self.ckpt.directory, migrations=candidates)
         self.state = tree["state"]
         self.clusters_done = int(tree.get("clusters_done", 0))
-        if self.id_tracker is not None and "id_counts" in tree:
-            self.id_tracker.load_state_tree(tree["id_counts"])
+        if self.id_tracker is not None:
+            if "id_counts" in tree:
+                self.id_tracker.load_state_tree(tree["id_counts"])
+            else:
+                # the matched layout had no usable histogram section (old
+                # writer, or a StreamConfig change made the shapes
+                # unmatchable): restore the deterministic fresh state the
+                # sectioned path would have installed, and surface it —
+                # leaving the live tracker's POST-checkpoint observations
+                # in place would silently diverge in in-process recovery
+                template = getattr(self.id_tracker, "state_template", None)
+                if template is not None:
+                    self.id_tracker.load_state_tree(template())
+                warnings.warn(
+                    "checkpoint had no usable id_counts section; tracker "
+                    "restarted fresh from the restored step"
+                )
+        if self.trigger is not None:
+            if "trigger" in tree:
+                self.trigger.load_state_tree(tree["trigger"])
+                # windows evaluated between this checkpoint and the crash
+                # will be re-evaluated on replay — drop their events so
+                # the log shows each closed window once
+                self.trigger.events = [
+                    e for e in self.trigger.events if e.step <= step
+                ]
+            else:
+                # same deterministic semantics as the sectioned path
+                # (missing section restores the fresh template)
+                self.trigger.load_state_tree(self.trigger.state_template())
+                self.trigger.events = [
+                    e for e in self.trigger.events if e.step <= step
+                ]
+                warnings.warn(
+                    "checkpoint had no trigger section; trigger restarted "
+                    "fresh from the restored step"
+                )
         return step

@@ -22,7 +22,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim.remap import collection_moment_updater, zeros_like_moments
-from repro.train.freq import points_from_counts
+from repro.stream.points import points_from_counts
+
+
+def _draw_points(counts, n: int, seed: int):
+    """(ids, weights) from a per-feature count source: a DENSE histogram
+    array, or a sketch-backed provider (``repro.stream.FeatureSketch``)
+    exposing ``points(n, seed)`` — exact head + unbiased tail at
+    vocab-independent tracker memory."""
+    if hasattr(counts, "points"):
+        return counts.points(n, seed)
+    return points_from_counts(counts, n, seed)
+
+
+def _dense_weights(counts, d1: int) -> np.ndarray:
+    """Per-id weights for the count-weighted moment remap.  Dense
+    histograms are used verbatim; a sketch provider streams an O(d1)
+    TRANSIENT estimate (same order as the transition's assign_all pass —
+    tracker state stays O(sketch))."""
+    if hasattr(counts, "id_weights"):
+        return counts.id_weights(d1)
+    return np.asarray(counts)
 
 
 def transition_table(
@@ -38,25 +58,26 @@ def transition_table(
     max_points_per_centroid: int = 256,
 ):
     """Returns ``(new_params, new_buffers, update_moments)`` for one CCE
-    table.  ``counts`` is the table's observed id histogram; when present
-    the k-means runs count-WEIGHTED on the observed ids (the paper's
-    epoch-boundary distribution, exactly — not a with-replacement
-    approximation of it) and the moment remap averages with the same
-    weights.  None or all-zero falls back to uniform subsampling.
-    ``update_moments(moment_subtree)`` remaps/resets/keeps that table's
-    per-row optimizer moments per ``policy``."""
+    table.  ``counts`` is the table's observed id histogram — a dense
+    array OR a sketch provider with ``points``/``id_weights`` (see
+    ``repro.stream``); when present the k-means runs count-WEIGHTED on
+    the observed ids (the paper's epoch-boundary distribution, exactly —
+    not a with-replacement approximation of it) and the moment remap
+    averages with the same weights.  None or all-zero falls back to
+    uniform subsampling.  ``update_moments(moment_subtree)`` remaps/
+    resets/keeps that table's per-row optimizer moments per ``policy``."""
     sample_ids = sample_weights = id_weights = None
     if counts is not None:
         seed = int(
             jax.random.randint(jax.random.fold_in(key, 10_007), (), 0, 2**31 - 1)
         )
-        drawn = points_from_counts(
+        drawn = _draw_points(
             counts, min(table.d1, max_points_per_centroid * table.k), seed
         )
         if drawn is not None:
             sample_ids = jnp.asarray(drawn[0])
             sample_weights = jnp.asarray(drawn[1], jnp.float32)
-            id_weights = jnp.asarray(np.asarray(counts), jnp.float32)
+            id_weights = jnp.asarray(_dense_weights(counts, table.d1), jnp.float32)
     new_params, new_buffers = table.cluster(
         key, params, buffers,
         sample_ids=sample_ids, sample_weights=sample_weights,

@@ -89,3 +89,46 @@ def test_reshard_restore_other_sharding(tmp_path):
     placed = reshard_restore(host, sh)
     assert placed["w"].sharding == sh["w"]
     np.testing.assert_array_equal(np.asarray(placed["w"]), np.asarray(t["w"]))
+
+
+def test_sectioned_restore_drops_and_defaults_toplevel_keys(tmp_path):
+    """New-format checkpoints carry a top-level section index: a reader
+    missing a stored section drops it by NAME, a reader with a NEW
+    section keeps its template default — no leaf-count arithmetic."""
+    t = _tree()
+    stored = dict(t, aux=[np.arange(5), np.float64(2.5)])
+    save_checkpoint(str(tmp_path), 1, stored)
+    # reader without "aux": section dropped
+    _, back, _ = load_checkpoint(str(tmp_path), template=t)
+    assert "aux" not in back
+    np.testing.assert_array_equal(
+        np.asarray(back["w"]), np.asarray(t["w"]))
+    # reader with an extra section the writer lacked: template default kept
+    t2 = dict(t, trigger=[np.int64(0), np.zeros(3)])
+    _, back2, _ = load_checkpoint(str(tmp_path), template=t2)
+    np.testing.assert_array_equal(np.asarray(back2["trigger"][1]), np.zeros(3))
+    np.testing.assert_array_equal(np.asarray(back2["w"]), np.asarray(t["w"]))
+    # shared sections still shape-check: a wrong-shape template fails
+    bad = dict(t, w=np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), template=bad)
+
+
+def test_sectioned_restore_prefers_consuming_over_dropping(tmp_path):
+    """A candidate that MIGRATES a stored section must win over an
+    earlier candidate that would merely drop it."""
+    t = _tree()
+    stored = dict(t, counts=[np.arange(4, dtype=np.int64)])
+    save_checkpoint(str(tmp_path), 1, stored)
+    dropper = dict(t)  # would match by dropping "counts"
+    migrator = dict(t, counts=[np.zeros(4, np.int64)])
+
+    def convert(tree):
+        return dict(tree, counts=[tree["counts"][0] * 10])
+
+    _, back, _ = load_checkpoint(
+        str(tmp_path), migrations=[(dropper, None), (migrator, convert)]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(back["counts"][0]), np.arange(4) * 10
+    )

@@ -15,7 +15,6 @@ from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
 from repro.optim import sgd
-from repro.train.freq import IdFrequencyTracker
 from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
 
 
@@ -37,9 +36,13 @@ def _train(emb_method: str, steps: int = 120, cap: int = 256, seed: int = 0,
     tracker = None
     if emb_method == "cce" and cluster_every:
         # the transition's k-means samples from the OBSERVED id
-        # distribution (the paper's epoch-boundary sample), and the
-        # optimizer moments ride through the new assignments
-        tracker = IdFrequencyTracker(cfg.vocab_sizes)
+        # distribution (the paper's epoch-boundary sample), via the
+        # SKETCH-backed tracker — exact heavy-hitter head + unbiased
+        # sketch tail at vocab-independent memory (the production
+        # configuration; the dense tracker is the test-scale reference)
+        # — and the optimizer moments ride through the new assignments
+        tracker = dlrm.make_id_tracker(
+            cfg, dlrm_criteo.reduced_stream(window=0))
 
         def cluster_fn(key, params, buffers, opt):
             return dlrm.cluster_tables(key, params, buffers, cfg, opt,
