@@ -15,6 +15,12 @@ supertables, launches-per-step counted, results written to
 frequency tracker memory (at the real Criteo vocabularies) and observe()
 throughput (sync conservative vs async device path), written to
 ``BENCH_stream.json`` (also a CI artifact).
+
+``--fuse`` benches the launch-fusion trajectory (DESIGN.md §6): the same
+26-feature DLRM embedding step under the per-feature loop, the PR-3
+3-group collection, and the unified single-launch supertable (plus the
+host-translated-rows variant) — launches/step and emb fwd+bwd latency,
+written to ``BENCH_fuse.json`` (also a CI artifact).
 """
 import json
 import time
@@ -218,6 +224,105 @@ def bench_collection(out=print, json_path="BENCH_collection.json",
     return result
 
 
+def bench_fuse(out=print, json_path="BENCH_fuse.json", batch=256, reps=3):
+    """Looped vs 3-group vs unified embedding step (the launch-fusion
+    trajectory, DESIGN.md §6).
+
+    The same Criteo-shaped (CI-capped) 26-feature DLRM tables run under
+    all three collection modes; per mode the embedding forward+backward is
+    timed on the fused-jnp path (meaningful on CPU; the kernel path is
+    interpret mode off-TPU and is timed separately for the fused modes as
+    a structural check only) and the heavy launch count is recorded.  A
+    fourth variant feeds HOST-translated rows to the unified collection —
+    the pod-scale dataflow where the device never gathers the pointer
+    tables.
+    """
+    import numpy as np
+
+    from repro.configs import dlrm_criteo
+    from repro.core.collection import EmbeddingCollection
+    from repro.data import HostTranslator
+    from repro.models.dlrm import DLRMConfig
+
+    vocabs = tuple(min(v, 20_000) for v in dlrm_criteo.CRITEO_KAGGLE_VOCABS)
+    cfg = DLRMConfig(
+        vocab_sizes=vocabs, n_dense=13, emb_dim=16,
+        bottom_mlp=(64, 32, 16), top_mlp=(64, 1),
+        emb_method="cce", emb_param_cap=2048,
+    )
+    tables = cfg.collection.tables
+    rng = np.random.default_rng(0)
+    sparse_np = np.stack(
+        [rng.integers(0, v, batch) for v in vocabs], axis=1
+    ).astype(np.int32)
+    sparse = jnp.asarray(sparse_np)
+    co = jax.random.normal(jax.random.PRNGKey(1), (batch, cfg.n_sparse, 16))
+    key = jax.random.PRNGKey(0)
+
+    modes = {"looped": "loop", "grouped3": "group", "unified": "univ"}
+    launches, times = {}, {}
+    univ = None
+    for name, mode in modes.items():
+        coll = EmbeddingCollection.build(tables, mode=mode)
+        params, buffers = coll.init(key)
+        launches[name] = coll.n_lookup_launches
+
+        def emb_loss(p, uk, _coll=coll, _buf=buffers):
+            outv = _coll.lookup_all(p, _buf, sparse, use_kernel=uk)
+            return jnp.sum(outv * co)
+
+        times[name] = {
+            "fused_jnp": timeit(
+                jax.jit(jax.grad(lambda p: emb_loss(p, False))), params,
+                reps=reps,
+            )
+        }
+        if mode != "loop":  # structural check only off-TPU (interpret)
+            times[name]["kernel_interp"] = timeit(
+                jax.jit(jax.grad(lambda p: emb_loss(p, True))), params,
+                reps=reps,
+            )
+        if mode == "univ":
+            univ = (coll, params, buffers)
+
+    # unified + host-translated rows: the device program consumes only
+    # the pre-translated (B, cols, T) tensor
+    coll, params, buffers = univ
+    translator = HostTranslator(coll, buffers)
+    t0 = time.perf_counter()
+    rows_np = translator.rows(sparse_np)
+    translate_us = (time.perf_counter() - t0) * 1e6
+    rows = jnp.asarray(rows_np)
+
+    def emb_loss_rows(p):
+        outv = coll.lookup_all(p, buffers, None, use_kernel=False, rows=rows)
+        return jnp.sum(outv * co)
+
+    times["unified_host_rows"] = {
+        "fused_jnp": timeit(jax.jit(jax.grad(emb_loss_rows)), params, reps=reps),
+        "host_translate_us": translate_us,
+    }
+    launches["unified_host_rows"] = launches["unified"]
+
+    result = {
+        "backend": jax.default_backend(),
+        "note": ("CPU kernel times are interpret-mode (validation), not "
+                 "TPU; the structural claim is launches/step"),
+        "batch": batch,
+        "n_features": cfg.n_sparse,
+        "launches_per_step": launches,
+        "emb_fwd_bwd_us": times,
+        "rows_tensor": {"cols": coll.rows_n_cols, "T": coll.rows_n_tables},
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out("fuse: launches/step " + json.dumps(launches))
+    out("emb fwd+bwd us (fused_jnp): " + json.dumps(
+        {k: round(v["fused_jnp"]) for k, v in times.items()}))
+    out(f"wrote {json_path}")
+    return result
+
+
 def bench_stream(out=print, json_path="BENCH_stream.json",
                  batch=4096, n_batches=32):
     """Dense vs sketch frequency tracker: state memory and observe()
@@ -350,13 +455,18 @@ if __name__ == "__main__":
                     help="only the looped-vs-fused collection bench")
     ap.add_argument("--stream", action="store_true",
                     help="only the dense-vs-sketch tracker bench")
+    ap.add_argument("--fuse", action="store_true",
+                    help="only the looped/3-group/unified launch bench")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
     if args.stream:
         bench_stream(json_path=args.json or "BENCH_stream.json")
     elif args.collection:
         bench_collection(json_path=args.json or "BENCH_collection.json")
+    elif args.fuse:
+        bench_fuse(json_path=args.json or "BENCH_fuse.json")
     else:
         main()
         bench_collection(json_path=args.json or "BENCH_collection.json")
         bench_stream(json_path="BENCH_stream.json")
+        bench_fuse(json_path="BENCH_fuse.json")

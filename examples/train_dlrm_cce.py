@@ -1,16 +1,21 @@
 """End-to-end driver: train DLRM with CCE-compressed tables on the
 synthetic Criteo-like clickstream for a few hundred steps, with
 checkpointing, sketch-based frequency tracking (count-min + heavy
-hitters at vocab-independent memory, device-side async updates),
-ENTROPY/DRIFT-TRIGGERED clustering (the adaptive form of the paper's
-interleaved recipe — a periodic fallback schedule stays on), an injected
-failure, and restart-exact recovery.  Every trigger evaluation is logged
-(entropy, drift, fired-or-not) so the adaptive schedule is observable.
+hitters at vocab-independent memory, cell counting fused INTO the
+donated train step — zero extra dispatches), ENTROPY/DRIFT-TRIGGERED
+clustering (the adaptive form of the paper's interleaved recipe — a
+periodic fallback schedule stays on), an injected failure, and
+restart-exact recovery.  Every trigger evaluation is logged (entropy,
+drift, fired-or-not) so the adaptive schedule is observable, and the
+quickstart opens by measuring the launch-fusion win (per-feature loop vs
+ONE unified supertable launch, DESIGN.md §6).
 
 Run:  PYTHONPATH=src python examples/train_dlrm_cce.py [--steps 300]
 """
 import argparse
+import dataclasses
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +25,48 @@ from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
 from repro.optim import sgd
-from repro.stream import ClusterTrigger
+from repro.stream import ClusterTrigger, make_step_cell_counter
 from repro.train.loop import (
     FailureInjector, Trainer, init_state, make_train_step, merge_buffers,
     split_buffers,
 )
+
+
+def _time_steps(step_fn, state, batch, n=8):
+    s, _ = step_fn(state, batch)  # compile
+    jax.block_until_ready(s.params)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        s, _ = step_fn(s, batch)
+    jax.block_until_ready(s.params)
+    return (time.perf_counter() - t0) / n * 1e3  # ms/step
+
+
+def show_fusion_win(cfg, args):
+    """Launches/step and step latency, per-feature loop vs the unified
+    single-launch collection (both on the jnp lookup path so the numbers
+    mean something on CPU; on TPU the unified path is the Pallas kernel)."""
+    batch0 = next(clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0), args.batch))
+    batch0 = {k: np.asarray(v)[None] for k, v in batch0.items() if k != "step"}
+    opt = sgd(momentum=0.9)
+    stats = {}
+    for label, mode in (("per-feature loop", "loop"), ("unified", "univ")):
+        c = dataclasses.replace(cfg, emb_fuse=mode, emb_use_kernel=False)
+        p, b = dlrm.init(jax.random.PRNGKey(0), c)
+        dyn, static = split_buffers(b)
+
+        def loss_fn(pp, bb, mb, _c=c):
+            return dlrm.bce_loss(pp, bb, _c, mb), {}
+
+        step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05),
+                               static, donate=True)
+        ms = _time_steps(step, init_state(p, opt, dyn), batch0)
+        stats[label] = (c.collection.n_lookup_launches, ms)
+        print(f"  {label:17s}: {c.collection.n_lookup_launches:2d} heavy "
+              f"lookup launches/step, {ms:6.1f} ms/step")
+    speedup = stats["per-feature loop"][1] / stats["unified"][1]
+    print(f"  -> ONE fused launch, {speedup:.1f}x faster step\n")
 
 
 def main():
@@ -37,6 +79,9 @@ def main():
     cfg = dlrm_criteo.reduced(emb_method="cce", cap=args.cap)
     print(f"DLRM with CCE tables: {cfg.n_emb_params()} embedding params "
           f"({cfg.compression():.1f}x compression)")
+    print("launch fusion (before/after):")
+    show_fusion_win(cfg, args)
+
     params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
     dyn, static = split_buffers(buffers)
     opt = sgd(momentum=0.9)
@@ -44,20 +89,25 @@ def main():
     def loss_fn(p, b, mb):
         return dlrm.bce_loss(p, b, cfg, mb), {}
 
-    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
-    state = init_state(params, opt, dyn)
     data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0)
 
-    # sketch-backed tracking (only the CCE features carry sketches) with
-    # async device-side updates, windowed for the adaptive trigger
+    # sketch-backed tracking (only the CCE features carry sketches),
+    # windowed for the adaptive trigger; the cell counter is embedded in
+    # the donated train step below, so tracking costs ZERO extra device
+    # dispatches (the async fold only does host head/ring bookkeeping)
     tracker = dlrm.make_id_tracker(
         cfg, dlrm_criteo.reduced_stream(window=max(4, args.steps // 20),
                                         async_fold=True),
     )
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static,
+                           sketch_fn=make_step_cell_counter(tracker),
+                           donate=True)
+    state = init_state(params, opt, dyn)
     trigger = ClusterTrigger(entropy_drop=0.1, drift_threshold=0.25, warmup=2)
     print(f"sketch tracker: {tracker.nbytes / 1e3:.0f} kB for vocabs "
           f"{cfg.vocab_sizes} (dense histograms would be "
-          f"{sum(cfg.vocab_sizes) * 8 / 1e3:.0f} kB)")
+          f"{sum(cfg.vocab_sizes) * 8 / 1e3:.0f} kB); cell counting rides "
+          f"the train step's single launch")
 
     def cluster_fn(key, p, b, opt_state):
         return dlrm.cluster_tables(key, p, b, cfg, opt_state,
@@ -67,7 +117,7 @@ def main():
     ckpt_every = max(10, args.steps // 6)
     fail_step = 2 * args.steps // 3  # crashes after >=1 checkpoint exists
     trainer = Trainer(
-        jax.jit(step, donate_argnums=(0,)), state, static,
+        step, state, static,
         clickstream_batches(data_cfg, args.batch),
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         cluster_fn=cluster_fn, cluster_every=args.steps // 4, cluster_max=3,
@@ -100,7 +150,10 @@ def main():
     print(f"train loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}; "
           f"test BCE {bce:.4f}; clusterings {trainer.clusters_done} "
           f"({trigger.fired} trigger-fired); "
-          f"stragglers flagged {len(trainer.monitor.flagged)}")
+          f"stragglers flagged {len(trainer.monitor.flagged)}; "
+          f"steady-state step {trainer.monitor.mean * 1e3:.1f} ms "
+          f"({cfg.collection.n_lookup_launches} heavy lookup launch/step, "
+          f"sketch delta in-step)")
 
 
 if __name__ == "__main__":

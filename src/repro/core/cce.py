@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import embeddings as emb_lib
 from repro.core import hashing
 from repro.core import kmeans as km
 from repro.kernels import ops as kops
@@ -72,62 +73,42 @@ class CCE:
     def n_params(self) -> int:
         return 2 * self.k * self.d2
 
-    # --- collection grouping (DESIGN.md §3) ------------------------------
+    # --- collection grouping (DESIGN.md §3/§6) ---------------------------
 
-    def group_signature(self):
-        """Tables with equal signatures fuse into one supertable and share
-        a single ``kops.cce_lookup`` launch per step.  ``k`` is NOT part of
-        the signature: the supertable pads ragged codebooks to the group
-        max (``kops.pad_stack_tables``), so same-(c, dsub) tables fuse even
+    @property
+    def fuse_spec(self) -> emb_lib.FuseSpec:
+        """c columns of T=2 stacked sub-tables (main + helper): the
+        universal-fusion shape every gather-sum method shares.  ``k`` is
+        NOT part of the group key — the supertable pads ragged codebooks
+        to the group max (``kops.pad_stack_tables``), so tables fuse even
         when per-table budgets differ."""
-        return ("cce", self.c, self.dsub, str(jnp.dtype(self.dtype)))
+        return emb_lib.FuseSpec(cols=self.c, n_tables=2, k=self.k, dsub=self.dsub)
 
-    @staticmethod
-    def stack_many(tables, params_seq):
-        """Per-feature {"tables": (c, 2, k_f, dsub)} -> one supertable
-        {"tables": (F·c, 2, max k_f, dsub)} (zero-padded codebook axis)."""
-        k_pad = max(t.k for t in tables)
-        return {
-            "tables": kops.pad_stack_tables(
-                [p["tables"] for p in params_seq], k_pad=k_pad
-            )
-        }
+    def fuse_slab(self, params):
+        return params["tables"]  # (c, 2, k, dsub) — already the natural slab
 
-    @staticmethod
-    def unstack_many(tables, group_params):
-        """Inverse of ``stack_many``: slice each feature's (c, 2, k_f, dsub)
-        block back out (drops the codebook padding)."""
-        out, off = [], 0
-        for t in tables:
-            out.append({"tables": group_params["tables"][off : off + t.c, :, : t.k, :]})
-            off += t.c
-        return out
+    def unfuse_slab(self, slab):
+        return {"tables": slab}
 
-    @staticmethod
-    def lookup_many(tables, group_params, buffers_seq, ids, *, use_kernel=True):
-        """Fused multi-feature lookup: ONE kernel launch for the whole group.
+    def fuse_rows(self, buffers, ids):
+        return self._rows(buffers, ids)  # (c, B, 2)
 
-        ``ids`` (B, F) int32, one column per feature; ``group_params`` the
-        stacked supertable; ``buffers_seq`` per-feature {ptr, hs} buffers
-        (pointer arrays stay per-feature — their vocabularies differ).
-        Returns (B, F, d2).  The per-feature row translation (learned ptr
-        gather + helper hash) is cheap int math; the 2·F·c table gathers
-        collapse into a single blocked one-hot matmul (Mosaic on TPU,
-        interpret mode on CPU).  ``use_kernel=False`` takes the vmapped
-        jnp gather path — same math, used as the numerics oracle."""
-        B, F = ids.shape
-        rows = jnp.concatenate(
-            [t._rows(buffers_seq[f], ids[:, f]) for f, t in enumerate(tables)],
-            axis=0,
-        )  # (F·c, B, 2)
-        if use_kernel:
-            out = kops.cce_lookup(rows, group_params["tables"])  # (B, F·c·dsub)
-            return out.reshape(B, F, -1)
-        tabs = group_params["tables"]
-        main = jax.vmap(lambda t, r: t[r])(tabs[:, 0], rows[..., 0])
-        helper = jax.vmap(lambda t, r: t[r])(tabs[:, 1], rows[..., 1])
-        pieces = main + helper  # (F·c, B, dsub)
-        return jnp.moveaxis(pieces, 0, -2).reshape(B, F, -1)
+    def fuse_rows_np(self, buffers, ids):
+        """Bit-exact numpy twin of the JITTED ``fuse_rows`` — the
+        host-side pointer translation (DESIGN.md §4): learned-pointer
+        gather + helper hash computed against host mirrors of the
+        buffers, so the device program never gathers the (c, d1) pointer
+        table.  The ptr gather clamps out-of-range ids exactly like the
+        XLA gather does (numpy would raise where the device clamps); the
+        helper hash consumes the RAW id, also matching the device."""
+        ids = np.asarray(ids)
+        ptr = np.asarray(buffers["ptr"])
+        hs = np.asarray(buffers["hs"])  # (c, 2) uint32
+        main = ptr[:, np.clip(ids, 0, self.d1 - 1)]  # (c, B)
+        helper = hashing.multiply_shift_np(
+            ids[None], hs[:, :1], hs[:, 1:], self.k
+        )  # (c, B)
+        return np.stack([main, helper], axis=-1).astype(np.int32)
 
     # --- init -----------------------------------------------------------
 

@@ -3,23 +3,29 @@
 The paper's hot loop is ``concat_i M_i[h_i(id)] + M'_i[h'_i(id)]`` per
 categorical feature; DLRM has 26 of them.  Issuing 26 independent gathers
 per step wastes the fused one-hot-matmul kernel (``kernels/cce_lookup``)
-and launches O(n_features) ops where O(n_groups) suffice — the
+and launches O(n_features) ops where O(1) suffices — the
 ``QREmbeddingBag`` lesson from Shi et al. 2020, and the precondition CAFE
 (Zhang et al. 2023) names for adaptive per-feature compression to pay off.
 
-The collection groups a model's tables by fuse-compatibility signature
-(``table.group_signature()``) and stacks each group's parameters:
+The collection groups a model's tables by fuse compatibility and stacks
+each group's parameters (DESIGN.md §3/§6):
 
-  * CCE tables with equal (c, dsub, dtype) -> ONE supertable
-    (F·c, 2, max k_f, dsub) + per-feature pointer arrays; the whole group
-    is one ``kops.cce_lookup`` launch per step, forward AND backward
-    (ragged codebooks zero-padded by ``kops.pad_stack_tables`` — padded
-    rows are unreachable and get exactly-zero gradient).
-  * Full tables with equal (d2, dtype) -> ONE padded (F, max d1, d2)
-    stack; the whole group is a single gather.  Groups are sub-partitioned
-    when the d1 spread would make padding cost more than the fusion saves.
-  * Everything else (hash/ce/robe/dhe/tt and methods without a signature)
-    falls back to a per-feature loop group.
+  * UNIVERSAL groups — every method whose lookup is a per-column
+    gather-sum (``table.fuse_spec``: CCE, CEConcat, HashingTrick, and
+    small FullTables) stacks into ONE supertable
+    (total cols, T, max k_f, dsub) and runs as ONE ``kops.cce_lookup``
+    launch per step, forward AND backward.  Tables with different natural
+    column widths split into sub-columns of the group gcd; tables with
+    fewer than T sub-tables pad their row tensor with the ``-1`` sentinel
+    (a sentinel row matches no one-hot lane: exactly-zero forward
+    contribution and exactly-zero gradient).  On the compressed Criteo
+    DLRM config every table joins one universal group — the whole
+    embedding stack is a single heavy launch.
+  * Full groups with equal (d2, dtype) — big uncompressed tables (gated
+    out of universal fusion: their one-hot matmul would be O(d1) wide)
+    batch into ONE padded (F, max d1, d2) gather, sub-partitioned when
+    the d1 spread would make padding cost more than the fusion saves.
+  * Everything else (hemb/robe/dhe/tt) falls back to a per-feature loop.
 
 State layout (the "grouped layout", DESIGN.md §3):
 
@@ -32,16 +38,21 @@ method (cluster, remap_moments, materialize) applies unchanged to a
 feature's slice.  ``stack_params``/``unstack_params`` convert between the
 grouped layout and the legacy per-feature layout (used by the checkpoint
 migration: pre-collection checkpoints restore bit-exact, see
-``legacy_layout_migration``).
+``legacy_layout_migration``).  Stacking is value-preserving by
+construction: sub-column splits are reshapes, T/codebook padding is
+zeros, and padded/sentinel regions receive exactly-zero gradient so they
+STAY zero under training.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import embeddings as emb_lib
 from repro.core.cce import CCE
@@ -52,12 +63,100 @@ from repro.core.cce import CCE
 #: budget-capped config (all small tables) still lands in one gather.
 FULL_PAD_RATIO = 8
 
+#: Universal groups pad every member's codebook axis to the group max k
+#: (and its sub-table axis to the group max T), so the supertable must not
+#: cost more than this multiple of the members' NATURAL parameter count —
+#: otherwise one large-k member would inflate every other member's slab
+#: (params, optimizer moments, AND per-column one-hot work all scale with
+#: k_pad).  Buckets greedily split (largest k first) to stay inside the
+#: bound; a split-off all-full bucket reverts to the padded gather.  The
+#: compressed Criteo config sits well inside the bound (~1.8x) and stays
+#: ONE launch.
+UNIV_PAD_WASTE = 3.5
+
+#: The aggregate bound alone would let a dominant huge-k member carry a
+#: tiny member to astronomical PER-MEMBER inflation (an 8-row table padded
+#: to a 100k-row codebook is megabytes of dead params and 100k-row one-hot
+#: work per lookup, yet barely moves the bucket total).  So each member's
+#: padded slab must ALSO stay within UNIV_PAD_WASTE of its own natural
+#: size — unless the padded slab is small in ABSOLUTE terms (below this
+#: many elements), where relative inflation is irrelevant: Criteo's d1=3
+#: full table padded to the CCE codebook costs kilobytes and one launch
+#: saved is worth far more.
+UNIV_PAD_SLACK_ELEMS = 1 << 20
+
 
 @dataclasses.dataclass(frozen=True)
 class TableGroup:
-    kind: str  # "cce" | "full" | "loop"
+    kind: str  # "univ" | "full" | "loop"
     features: tuple[int, ...]  # global feature indices, ascending
     tables: tuple[Any, ...]  # the features' method objects, same order
+    # universal groups only: the shared sub-column width (gcd of member
+    # natural dsubs) and stacked-table count (max member n_tables)
+    dsub: int | None = None
+    n_tables: int | None = None
+
+    @functools.cached_property
+    def col_counts(self) -> tuple[int, ...]:
+        """Supertable columns per feature (natural cols × dsub split)."""
+        return tuple(
+            t.fuse_spec.cols * (t.fuse_spec.dsub // self.dsub)
+            for t in self.tables
+        )
+
+    @property
+    def n_cols(self) -> int:
+        return sum(self.col_counts)
+
+    @property
+    def k_pad(self) -> int:
+        return max(t.fuse_spec.k for t in self.tables)
+
+
+# --- universal-slab plumbing (shared by device + host paths) ----------------
+
+
+def _split_slab(nat, dsub: int, n_tables: int):
+    """Natural (c, T, k, d) slab -> group layout (c*s, T_g, k, dsub):
+    each column splits into s = d/dsub sub-columns (a pure reshape —
+    sub-column j of column i holds rows' [j*dsub:(j+1)*dsub] slice, so
+    concatenating sub-column outputs reconstructs the original d2
+    layout), then missing sub-tables zero-pad the T axis (their rows are
+    the -1 sentinel: unreachable, zero-grad, stays zero)."""
+    c, T, k, d = nat.shape
+    s = d // dsub
+    x = nat.reshape(c, T, k, s, dsub)
+    x = jnp.moveaxis(x, 3, 1).reshape(c * s, T, k, dsub)
+    if T < n_tables:
+        x = jnp.pad(x, ((0, 0), (0, n_tables - T), (0, 0), (0, 0)))
+    return x
+
+
+def _merge_slab(slab, spec: emb_lib.FuseSpec, dsub: int):
+    """Inverse of ``_split_slab`` (slab already sliced to the feature's
+    k): drop T padding, re-interleave sub-columns."""
+    s = spec.dsub // dsub
+    x = slab[:, : spec.n_tables]
+    x = x.reshape(spec.cols, s, spec.n_tables, x.shape[2], dsub)
+    x = jnp.moveaxis(x, 1, 3).reshape(spec.cols, spec.n_tables, x.shape[3], spec.dsub)
+    return x
+
+
+def _expand_rows(rows, s: int, n_tables: int, xp):
+    """Natural (c, B, T) rows -> group (c*s, B, T_g): sub-columns share
+    their parent column's rows; padded T slots get the -1 sentinel.
+    ``xp`` is numpy (host translation) or jnp (device) — bit-identical."""
+    if s > 1:
+        rows = xp.repeat(rows, s, axis=0)
+    T = rows.shape[-1]
+    if T < n_tables:
+        pad = xp.full(rows.shape[:-1] + (n_tables - T,), -1, np.int32)
+        rows = xp.concatenate([rows, pad.astype(rows.dtype)], axis=-1)
+    return rows
+
+
+def _gcd_all(vals) -> int:
+    return functools.reduce(math.gcd, vals)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,28 +167,138 @@ class EmbeddingCollection:
     # --- construction ----------------------------------------------------
 
     @classmethod
-    def build(cls, tables: Sequence[Any]) -> "EmbeddingCollection":
+    def build(cls, tables: Sequence[Any], mode: str = "univ") -> "EmbeddingCollection":
+        """``mode``:
+        * "univ" (default) — universal fusion: every gather-sum table
+          (``fuse_spec``) joins one supertable per dtype; ONE launch for
+          the whole embedding stack on the Criteo config.
+        * "group" — the pre-universal grouping (per-signature CCE groups
+          + padded full-gather buckets); kept as the benchmark baseline.
+        * "loop" — one loop group per feature (the pre-collection hot
+          loop); benchmark baseline only.
+        """
         tables = tuple(tables)
+        if mode == "loop":
+            groups = tuple(
+                TableGroup("loop", (i,), (t,)) for i, t in enumerate(tables)
+            )
+            return cls(tables, groups)
+        if mode not in ("univ", "group"):
+            raise ValueError(f"unknown collection mode {mode!r}")
+
+        legacy: list[int] = []  # features grouped by the pre-universal rules
+        groups: list[TableGroup] = []
+        if mode == "univ":
+            fusable: dict[str, list[int]] = {}
+            for i, t in enumerate(tables):
+                if hasattr(t, "fuse_spec"):
+                    fusable.setdefault(str(jnp.dtype(t.dtype)), []).append(i)
+                else:
+                    legacy.append(i)
+            for _, feats in fusable.items():
+                for bucket in cls._partition_univ(feats, tables):
+                    if all(
+                        isinstance(tables[i], emb_lib.FullTable) for i in bucket
+                    ):
+                        # full-only bucket: a one-hot matmul over k = d1
+                        # rows has nothing to amortize against — keep the
+                        # padded gather
+                        legacy.extend(bucket)
+                        continue
+                    members = sorted(bucket)
+                    specs = [tables[i].fuse_spec for i in members]
+                    groups.append(
+                        TableGroup(
+                            "univ",
+                            tuple(members),
+                            tuple(tables[i] for i in members),
+                            dsub=_gcd_all(s.dsub for s in specs),
+                            n_tables=max(s.n_tables for s in specs),
+                        )
+                    )
+        else:
+            legacy = list(range(len(tables)))
+
         by_sig: dict[Any, list[int]] = {}
-        for i, t in enumerate(tables):
-            sig_fn = getattr(t, "group_signature", None)
-            sig = sig_fn() if sig_fn is not None else ("loop", i)
+        for i in legacy:
+            t = tables[i]
+            if mode == "group" and isinstance(t, CCE):
+                sig = ("cce", t.c, t.dsub, str(jnp.dtype(t.dtype)))
+            elif isinstance(t, emb_lib.FullTable):
+                sig = t.group_signature()
+            else:
+                sig = ("loop", i)
             by_sig.setdefault(sig, []).append(i)
-        groups = []
         for sig, feats in by_sig.items():  # insertion order: first feature
-            kind = sig[0] if sig[0] in ("cce", "full") else "loop"
+            if sig[0] == "cce":
+                specs = [tables[i].fuse_spec for i in feats]
+                groups.append(
+                    TableGroup(
+                        "univ", tuple(feats), tuple(tables[i] for i in feats),
+                        dsub=_gcd_all(s.dsub for s in specs),
+                        n_tables=max(s.n_tables for s in specs),
+                    )
+                )
+                continue
+            kind = "full" if sig[0] == "full" else "loop"
             for bucket in cls._partition(kind, feats, tables):
                 groups.append(
                     TableGroup(kind, tuple(bucket), tuple(tables[i] for i in bucket))
                 )
+        if mode == "univ":
+            groups.sort(key=lambda g: g.features[0])
+        # mode="group" keeps the HISTORICAL order (signature insertion +
+        # d1-sorted full buckets) so its layout matches PR-3 checkpoints
+        # byte for byte — grouped_layout_migration depends on this
         return cls(tables, tuple(groups))
+
+    @staticmethod
+    def _partition_univ(feats, tables):
+        """Split a universal bucket so the padded supertable never costs
+        more than ``UNIV_PAD_WASTE``× the members' natural parameters.
+
+        Greedy, largest k first: each candidate joins the current bucket
+        only while (a) the combined padded size (every member's width ×
+        the bucket max T × the bucket max k) stays inside the aggregate
+        bound AND (b) every member individually stays inside the bound
+        (or below the UNIV_PAD_SLACK_ELEMS absolute allowance — tiny
+        tables may inflate relative to themselves, never in absolute
+        terms).  One huge-k member (a big hash table, a full table with
+        k = d1) can therefore never inflate a small-k member's slab —
+        they end up in separate buckets.  Deterministic given the table
+        list."""
+
+        def admits(members):
+            specs = [tables[i].fuse_spec for i in members]
+            k_pad = max(s.k for s in specs)
+            T = max(s.n_tables for s in specs)
+            padded = natural = 0
+            for s in specs:
+                w = s.cols * s.dsub
+                p, n = w * T * k_pad, w * s.n_tables * s.k
+                if p > UNIV_PAD_WASTE * n and p > UNIV_PAD_SLACK_ELEMS:
+                    return False  # per-member inflation, large in absolute terms
+                padded += p
+                natural += n
+            return padded <= UNIV_PAD_WASTE * natural
+
+        order = sorted(feats, key=lambda i: (-tables[i].fuse_spec.k, i))
+        buckets, cur = [], [order[0]]
+        for i in order[1:]:
+            if admits(cur + [i]):
+                cur.append(i)
+            else:
+                buckets.append(cur)
+                cur = [i]
+        buckets.append(cur)
+        return buckets
 
     @staticmethod
     def _partition(kind, feats, tables):
         """Split a signature bucket when padding would be pathological:
         full tables pad the VOCAB axis, so a (tiny, huge) mix is re-split
-        by d1 ratio; cce pads only the (budget-bounded) codebook axis and
-        never splits."""
+        by d1 ratio; universal groups are waste-bounded separately
+        (``_partition_univ``)."""
         if kind != "full" or len(feats) <= 1:
             return [feats]
         feats = sorted(feats, key=lambda i: tables[i].d1)
@@ -115,9 +324,12 @@ class EmbeddingCollection:
 
     @property
     def n_lookup_launches(self) -> int:
-        """Heavy table-lookup ops per forward pass: 1 per fused group,
-        1 per feature of a loop group (the quantity the refactor drives
-        from O(n_features) to O(n_groups))."""
+        """Heavy table-lookup ops per forward pass: 1 per fused group
+        (universal supertable launch or padded full gather), 1 per
+        feature of a loop group — the quantity the fusion work drives
+        from O(n_features) to O(1).  Asserted against a jaxpr-level
+        kernel-launch count in tests/test_collection.py so a refactor
+        cannot silently reintroduce the per-feature loop."""
         return sum(
             len(g.features) if g.kind == "loop" else 1 for g in self.groups
         )
@@ -130,6 +342,23 @@ class EmbeddingCollection:
             for f_local, i in enumerate(grp.features):
                 out[i] = (g, f_local)
         return out
+
+    @functools.cached_property
+    def univ_groups(self) -> tuple[int, ...]:
+        return tuple(g for g, grp in enumerate(self.groups) if grp.kind == "univ")
+
+    @property
+    def rows_n_tables(self) -> int:
+        """T of the host-translated rows tensor: max over universal
+        groups (narrower groups read their leading T slots)."""
+        return max((self.groups[g].n_tables for g in self.univ_groups), default=0)
+
+    @property
+    def rows_n_cols(self) -> int:
+        """Total supertable columns across universal groups — the rows
+        tensor is (B, rows_n_cols, rows_n_tables) int32, the ONLY sparse
+        input a host-translating pipeline ships (DESIGN.md §4/§6)."""
+        return sum(self.groups[g].n_cols for g in self.univ_groups)
 
     # --- init / stacking --------------------------------------------------
 
@@ -145,15 +374,27 @@ class EmbeddingCollection:
         return self.stack_params(per_p), self.stack_buffers(per_b)
 
     def stack_group_params(self, grp: TableGroup, params_seq):
-        if grp.kind == "cce":
-            return CCE.stack_many(grp.tables, params_seq)
+        if grp.kind == "univ":
+            from repro.kernels import ops as kops
+
+            slabs = [
+                _split_slab(t.fuse_slab(p), grp.dsub, grp.n_tables)
+                for t, p in zip(grp.tables, params_seq)
+            ]
+            return {"tables": kops.pad_stack_tables(slabs, k_pad=grp.k_pad)}
         if grp.kind == "full":
             return emb_lib.FullTable.stack_many(grp.tables, params_seq)
         return list(params_seq)
 
     def unstack_group_params(self, grp: TableGroup, group_params):
-        if grp.kind == "cce":
-            return CCE.unstack_many(grp.tables, group_params)
+        if grp.kind == "univ":
+            out, off = [], 0
+            for t, n in zip(grp.tables, grp.col_counts):
+                spec = t.fuse_spec
+                slab = group_params["tables"][off : off + n, :, : spec.k, :]
+                out.append(t.unfuse_slab(_merge_slab(slab, spec, grp.dsub)))
+                off += n
+            return out
         if grp.kind == "full":
             return emb_lib.FullTable.unstack_many(grp.tables, group_params)
         return list(group_params)
@@ -196,23 +437,82 @@ class EmbeddingCollection:
 
     # --- the hot path -----------------------------------------------------
 
-    def lookup_all(self, emb_params, emb_buffers, sparse, *, use_kernel=True):
-        """All features' embeddings in O(n_groups) heavy lookups.
-
-        sparse (B, n_features) int32 -> (B, n_features, d2).  CCE groups
-        route through the fused Pallas kernel when ``use_kernel`` (Mosaic
-        on TPU, interpret mode on CPU); ``use_kernel=False`` is the vmapped
-        jnp gather path — identical math, used as the numerics oracle and
-        as the GPU fallback."""
-        outs = [None] * self.n_features
-        for g, grp in enumerate(self.groups):
-            ids = jnp.take(sparse, jnp.asarray(grp.features), axis=1)  # (B, Fg)
-            if grp.kind == "cce":
-                vecs = CCE.lookup_many(
-                    grp.tables, emb_params[g], emb_buffers[g], ids,
-                    use_kernel=use_kernel,
+    def group_rows(self, grp: TableGroup, buffers_seq, ids):
+        """Device-side row translation for one universal group:
+        ids (B, Fg) -> (n_cols, B, T) int32.  Cheap int math (pointer
+        gather + multiply-shift hashes) next to the heavy launch; the
+        host twin is ``data.translate.HostTranslator``."""
+        return jnp.concatenate(
+            [
+                _expand_rows(
+                    t.fuse_rows(buffers_seq[f], ids[:, f]),
+                    grp.col_counts[f] // t.fuse_spec.cols,
+                    grp.n_tables,
+                    jnp,
                 )
-            elif grp.kind == "full":
+                for f, t in enumerate(grp.tables)
+            ],
+            axis=0,
+        )
+
+    def _univ_lookup(self, grp: TableGroup, group_params, rows, use_kernel):
+        """(n_cols, B, T) rows + supertable -> (B, n_cols*dsub)."""
+        from repro.kernels import ops as kops
+
+        if use_kernel:
+            return kops.cce_lookup(rows, group_params["tables"])
+        tabs = group_params["tables"]  # (C, T, k, dsub)
+
+        def col(tab, r):  # (T, k, dsub), (B, T)
+            picked = jax.vmap(
+                lambda tt, rt: tt[jnp.maximum(rt, 0)] * (rt >= 0)[:, None],
+                in_axes=(0, 1),
+            )(tab, r)  # (T, B, dsub) — sentinel rows contribute exact zero
+            return picked.sum(axis=0)
+
+        pieces = jax.vmap(col)(tabs, rows)  # (C, B, dsub)
+        B = rows.shape[1]
+        return jnp.moveaxis(pieces, 0, 1).reshape(B, -1)
+
+    def lookup_all(self, emb_params, emb_buffers, sparse, *, use_kernel=True,
+                   rows=None):
+        """All features' embeddings in O(n_groups) heavy lookups — ONE on
+        the compressed Criteo config.
+
+        sparse (B, n_features) int32 -> (B, n_features, d2).  Universal
+        groups route through the fused Pallas kernel when ``use_kernel``
+        (Mosaic on TPU, interpret mode on CPU); ``use_kernel=False`` is
+        the masked-gather jnp path — identical math, used as the numerics
+        oracle and as the GPU fallback.
+
+        ``rows`` (B, rows_n_cols, rows_n_tables) int32 — HOST-translated
+        row indices (``data.translate``): universal groups consume their
+        column slice directly and the device program never touches the
+        (c, d1) pointer buffers.  ``sparse`` may then be None when every
+        feature is universally fused.
+        """
+        outs = [None] * self.n_features
+        col_off = 0
+        for g, grp in enumerate(self.groups):
+            if grp.kind == "univ":
+                if rows is not None:
+                    grows = jnp.moveaxis(
+                        rows[:, col_off : col_off + grp.n_cols, : grp.n_tables],
+                        0, 1,
+                    )  # (n_cols, B, T)
+                    col_off += grp.n_cols
+                else:
+                    ids = jnp.take(sparse, jnp.asarray(grp.features), axis=1)
+                    grows = self.group_rows(grp, emb_buffers[g], ids)
+                flat = self._univ_lookup(grp, emb_params[g], grows, use_kernel)
+                off = 0
+                for f_local, i in enumerate(grp.features):
+                    n = grp.col_counts[f_local]
+                    outs[i] = flat[:, off * grp.dsub : (off + n) * grp.dsub]
+                    off += n
+                continue
+            ids = jnp.take(sparse, jnp.asarray(grp.features), axis=1)  # (B, Fg)
+            if grp.kind == "full":
                 vecs = emb_lib.FullTable.lookup_many(
                     grp.tables, emb_params[g], emb_buffers[g], ids
                 )
@@ -225,16 +525,13 @@ class EmbeddingCollection:
         return jnp.stack(outs, axis=1)
 
 
-def legacy_layout_migration(coll: EmbeddingCollection):
-    """Checkpoint migration pair for pre-collection (per-feature) layouts.
-
-    Returns ``(to_old, to_new)`` for ``checkpoint.load_checkpoint``'s
-    ``migrations``: ``to_old(new_template)`` derives the legacy template a
-    per-table-era writer produced (params["emb"] / optimizer moments / err
-    per feature, ebuf per feature), and ``to_new(old_tree)`` re-stacks a
-    restored legacy tree into the grouped layout.  Stacking only pads with
-    zeros (codebook / vocab padding), so a legacy checkpoint restores
-    BIT-EXACT into the grouped state — tested in test_collection.py.
+def _emb_layout_migration(old_p, old_b, new_p, new_b):
+    """(to_old, to_new) pair converting a checkpoint tree's embedding
+    subtrees (params["emb"] / optimizer moment slots / err, and
+    ebuf["emb"]) between two layouts via the given emb-tree transforms.
+    Every transform is value-preserving (unstack slices bit-identical
+    blocks; stacking only reshapes and pads with zeros that training
+    provably keeps zero), so restores through a migration are BIT-EXACT.
     """
 
     def _emb(tree, fn):
@@ -252,15 +549,38 @@ def legacy_layout_migration(coll: EmbeddingCollection):
         )
 
     def to_old(tree):
-        return dict(
-            tree,
-            state=_state(tree["state"], coll.unstack_params, coll.unstack_buffers),
-        )
+        return dict(tree, state=_state(tree["state"], old_p, old_b))
 
     def to_new(tree):
-        return dict(
-            tree,
-            state=_state(tree["state"], coll.stack_params, coll.stack_buffers),
-        )
+        return dict(tree, state=_state(tree["state"], new_p, new_b))
 
     return to_old, to_new
+
+
+def legacy_layout_migration(coll: EmbeddingCollection):
+    """Checkpoint migration pair for pre-collection (per-feature) layouts:
+    ``to_old(new_template)`` derives the legacy template a per-table-era
+    writer produced (params["emb"] / optimizer moments / err per feature,
+    ebuf per feature), ``to_new(old_tree)`` re-stacks a restored legacy
+    tree into the grouped layout — bit-exact, tested in
+    test_collection.py."""
+    return _emb_layout_migration(
+        coll.unstack_params, coll.unstack_buffers,
+        coll.stack_params, coll.stack_buffers,
+    )
+
+
+def grouped_layout_migration(coll: EmbeddingCollection,
+                             old_coll: EmbeddingCollection):
+    """Checkpoint migration pair between two GROUPED layouts — e.g. a
+    checkpoint written under the pre-universal grouping
+    (``build(mode="group")``: per-signature CCE slab + full buckets)
+    restoring into today's universal layout.  Both layouts convert
+    losslessly through the per-feature view, so the restore is bit-exact
+    (tested in test_collection.py)."""
+    return _emb_layout_migration(
+        lambda emb: old_coll.stack_params(coll.unstack_params(emb)),
+        lambda emb: old_coll.stack_buffers(coll.unstack_buffers(emb)),
+        lambda emb: coll.stack_params(old_coll.unstack_params(emb)),
+        lambda emb: coll.stack_buffers(old_coll.unstack_buffers(emb)),
+    )

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,28 @@ from repro.core import hashing
 
 Params = Any
 Buffers = Any
+
+
+class FuseSpec(NamedTuple):
+    """A table's natural shape inside the universal supertable machinery
+    (DESIGN.md §6): ``cols`` columns of ``n_tables`` stacked (k, dsub)
+    sub-tables, looked up as ``sum_t tab[t][rows[:, t]]`` per column.
+
+    Any method whose lookup is a per-column gather-sum exposes one
+    (CCE: cols=c, n_tables=2; CEConcat: cols=c, n_tables=1; HashingTrick:
+    1×1; FullTable: 1×1 with k=d1 and identity rows) and therefore fuses
+    into a group supertable.  ``dsub`` is the NATURAL column width; a
+    column always splits into ``s`` sub-columns of ``dsub/s`` sharing its
+    row index, which is how tables with different natural widths share one
+    launch (the collection picks the group gcd).  Methods whose lookup is
+    not a gather-sum (robe/dhe/tt, hemb's shared-table multi-hash) have no
+    spec and take the per-feature loop fallback.
+    """
+
+    cols: int
+    n_tables: int
+    k: int
+    dsub: int
 
 
 def _split_budget_rows(budget: int, d2: int, n_tables: int = 1) -> int:
@@ -110,6 +132,33 @@ class FullTable:
             jnp.arange(F)[None, :], jnp.minimum(ids, caps[None, :])
         ]
 
+    # --- universal fusion (DESIGN.md §6) ---------------------------------
+
+    @property
+    def fuse_spec(self) -> FuseSpec:
+        """One column whose codebook IS the table (identity rows): the
+        gather becomes a one-hot matmul over d1 rows, which is only worth
+        fusing for small tables — the collection's waste bound
+        (``UNIV_PAD_WASTE``) splits big full tables off, and full-only
+        buckets keep the padded batched gather."""
+        return FuseSpec(cols=1, n_tables=1, k=self.d1, dsub=self.d2)
+
+    def fuse_slab(self, params):
+        return params["table"][None, None]  # (1, 1, d1, d2)
+
+    def unfuse_slab(self, slab):
+        return {"table": slab[0, 0]}
+
+    def fuse_rows(self, buffers, ids):
+        # clamp to the real vocab (per-table XLA gather semantics); the
+        # supertable's padding rows stay unreachable
+        return jnp.clip(ids, 0, self.d1 - 1).astype(jnp.int32)[None, :, None]
+
+    def fuse_rows_np(self, buffers, ids):
+        return np.clip(np.asarray(ids), 0, self.d1 - 1).astype(np.int32)[
+            None, :, None
+        ]
+
 
 @dataclasses.dataclass(frozen=True)
 class HashingTrick:
@@ -158,6 +207,29 @@ class HashingTrick:
         H = np.zeros((self.d1, self.k), np.float32)
         H[np.arange(self.d1), rows] = 1.0
         return H
+
+    # --- universal fusion (DESIGN.md §6) ---------------------------------
+
+    @property
+    def fuse_spec(self) -> FuseSpec:
+        """One hash, one table: the QREmbeddingBag T=1 case — the hashed
+        gather is a one-hot matmul over the k shared rows."""
+        return FuseSpec(cols=1, n_tables=1, k=self.k, dsub=self.d2)
+
+    def fuse_slab(self, params):
+        return params["M"][None, None]  # (1, 1, k, d2)
+
+    def unfuse_slab(self, slab):
+        return {"M": slab[0, 0]}
+
+    def fuse_rows(self, buffers, ids):
+        return self._rows(buffers, ids)[None, :, None]  # (1, B, 1)
+
+    def fuse_rows_np(self, buffers, ids):
+        a, b = buffers["h"]
+        return hashing.multiply_shift_np(np.asarray(ids), a, b, self.k)[
+            None, :, None
+        ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +356,32 @@ class CEConcat:
         for i in range(self.c):
             H[np.arange(self.d1), i * self.k + rows[i]] = 1.0
         return H
+
+    # --- universal fusion (DESIGN.md §6) ---------------------------------
+
+    @property
+    def fuse_spec(self) -> FuseSpec:
+        """c hashed columns, one table each — CCE's shape minus the
+        learned pointer and the helper table (T=1)."""
+        return FuseSpec(cols=self.c, n_tables=1, k=self.k, dsub=self.dsub)
+
+    def fuse_slab(self, params):
+        return params["tables"][:, None]  # (c, 1, k, dsub)
+
+    def unfuse_slab(self, slab):
+        return {"tables": slab[:, 0]}
+
+    def fuse_rows(self, buffers, ids):
+        return self._rows(buffers, ids)[..., None]  # (c, B, 1)
+
+    def fuse_rows_np(self, buffers, ids):
+        ids = np.asarray(ids)
+        return np.stack(
+            [
+                hashing.multiply_shift_np(ids, a, b, self.k)
+                for (a, b) in buffers["hs"]
+            ]
+        )[..., None]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,12 +36,7 @@ class MultiplyShiftHash:
     def np(self, ids: np.ndarray) -> np.ndarray:
         """Pure-numpy twin (bit-exact with __call__) — host-side pointer
         translation and device-free buffer init."""
-        with np.errstate(over="ignore"):
-            x = np.asarray(ids).astype(np.uint32)
-            h = x * np.uint32(self.a) + np.uint32(self.b)
-            h = (h ^ (h >> np.uint32(15))) * _MERSENNE
-            h = h ^ (h >> np.uint32(13))
-            return (h % np.uint32(self.m)).astype(np.int32)
+        return multiply_shift_np(ids, self.a, self.b, self.m)
 
 
 def multiply_shift(ids, a, b, m: int):
@@ -58,6 +53,20 @@ def multiply_shift(ids, a, b, m: int):
     h = (h ^ (h >> 15)) * _MERSENNE
     h = h ^ (h >> 13)
     return (h % jnp.uint32(m)).astype(jnp.int32)
+
+
+def multiply_shift_np(ids, a, b, m: int) -> np.ndarray:
+    """Bit-exact numpy twin of ``multiply_shift`` — the host-side pointer
+    translation stage (DESIGN.md §4/§6) hashes with this so host-computed
+    rows equal device-computed rows bit for bit.  ``a``/``b`` are scalars
+    or arrays broadcast against ``ids`` (e.g. a packed (c, 2) ``hs``
+    buffer's columns)."""
+    with np.errstate(over="ignore"):
+        x = np.asarray(ids).astype(np.uint32)
+        h = x * np.asarray(a).astype(np.uint32) + np.asarray(b).astype(np.uint32)
+        h = (h ^ (h >> np.uint32(15))) * _MERSENNE
+        h = h ^ (h >> np.uint32(13))
+        return (h % np.uint32(m)).astype(np.int32)
 
 
 def pack_hashes(hashes) -> np.ndarray:

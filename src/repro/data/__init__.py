@@ -4,3 +4,4 @@ from repro.data.synthetic import (  # noqa: F401
     lm_token_batches,
     planted_embedding_model,
 )
+from repro.data.translate import HostTranslator, translate_batches  # noqa: F401

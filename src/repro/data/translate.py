@@ -1,0 +1,127 @@
+"""Host-side pointer translation — DESIGN.md §4, wired into §6's
+single-launch dataflow.
+
+The CCE pointer tables ``(c, d1)`` are the only O(vocab) training-time
+state besides uncompressed embeddings.  On a single device they live in
+device memory and the row translation is a cheap fused gather; on a pod
+they are HOST-resident and ride the input pipeline: this module
+translates raw ids -> supertable codebook rows on the host, using
+bit-exact numpy mirrors of every table's row function
+(``table.fuse_rows_np``: learned-pointer gather + ``multiply_shift_np``
+helper hashes for CCE, plain hashes for hash/CE tables, clamped identity
+for fused full tables).  The translated batch ships ONE int32 tensor
+
+    rows : (B, collection.rows_n_cols, collection.rows_n_tables)
+
+— the only sparse input the device program needs (``-1`` marks padded
+sub-table slots; the one-hot kernel treats them as no-ops), and the
+device program never gathers the pointer tables
+(``EmbeddingCollection.lookup_all(rows=...)``; asserted at the jaxpr
+level in tests/test_collection.py).
+
+The mirrors are snapshots: the clustering transition rewrites ``ptr`` /
+``hs``, so ``HostTranslator.update(emb_buffers)`` must run after every
+transition (and after a checkpoint restore) before translating further
+batches — exactly where a pod pipeline re-broadcasts the id-sharded
+pointer the sharded transition produces (§2).  Pass the translator to
+``Trainer(translator=...)`` and the training loop does both re-syncs
+itself (``translate_batches`` is lazy, so the next batch already uses
+the fresh mirrors — host-rows training is bit-identical to raw-ids
+training across transitions, tested).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.collection import EmbeddingCollection, _expand_rows
+
+
+class HostTranslator:
+    """ids -> supertable rows on host, bit-exact with the device path."""
+
+    def __init__(self, collection: EmbeddingCollection, emb_buffers=None):
+        self.collection = collection
+        self._buffers = None
+        if emb_buffers is not None:
+            self.update(emb_buffers)
+
+    def update(self, emb_buffers) -> None:
+        """Refresh the host mirrors from the (possibly device-resident)
+        buffer tree — numpy copies of every leaf the row functions read.
+        Cheap for everything but the pointer tables, whose device->host
+        pull is the point: afterwards the device never touches them."""
+        mirrored = []
+        for g, grp in enumerate(self.collection.groups):
+            if grp.kind != "univ":
+                mirrored.append(emb_buffers[g])
+                continue
+            mirrored.append(
+                [
+                    {k: v if isinstance(v, tuple) else np.asarray(v)
+                     for k, v in feat.items()}
+                    for feat in emb_buffers[g]
+                ]
+            )
+        self._buffers = mirrored
+
+    def rows(self, sparse: np.ndarray) -> np.ndarray:
+        """(B, n_features) raw ids -> (B, rows_n_cols, rows_n_tables)
+        int32 supertable rows (universal groups concatenated along the
+        column axis; narrower groups' extra sub-table slots are -1)."""
+        if self._buffers is None:
+            raise RuntimeError("HostTranslator.update(emb_buffers) first")
+        coll = self.collection
+        sparse = np.asarray(sparse)
+        T = coll.rows_n_tables
+        blocks = []
+        for g in coll.univ_groups:
+            grp = coll.groups[g]
+            grows = np.concatenate(
+                [
+                    _expand_rows(
+                        t.fuse_rows_np(self._buffers[g][f], sparse[:, i]),
+                        grp.col_counts[f] // t.fuse_spec.cols,
+                        grp.n_tables,
+                        np,
+                    )
+                    for f, (i, t) in enumerate(zip(grp.features, grp.tables))
+                ],
+                axis=0,
+            )  # (n_cols, B, T_g)
+            if grows.shape[-1] < T:
+                pad = np.full(grows.shape[:-1] + (T - grows.shape[-1],), -1,
+                              np.int32)
+                grows = np.concatenate([grows, pad], axis=-1)
+            blocks.append(grows)
+        return np.moveaxis(np.concatenate(blocks, axis=0), 0, 1).astype(np.int32)
+
+    def __call__(self, batch: dict, *, drop_sparse: bool = False) -> dict:
+        """Translate one batch dict: adds ``rows``; ``drop_sparse=True``
+        removes the raw ids so the translated rows are the ONLY sparse
+        input shipped to the device (a tracker-carrying pipeline keeps
+        them — frequency sketches hash raw ids)."""
+        if drop_sparse:
+            unfused = [
+                g.kind for g in self.collection.groups if g.kind != "univ"
+            ]
+            if unfused:
+                # rows only cover universal groups; the full/loop groups
+                # still consume raw ids — dropping them would crash the
+                # lookup far from the cause
+                raise ValueError(
+                    "drop_sparse=True needs every table universally fused; "
+                    f"this collection still has {sorted(set(unfused))} "
+                    "groups that consume raw ids"
+                )
+        out = dict(batch, rows=self.rows(batch["sparse"]))
+        if drop_sparse:
+            del out["sparse"]
+        return out
+
+
+def translate_batches(batches, translator: HostTranslator, *,
+                      drop_sparse: bool = False):
+    """Wrap a batch iterator with the host translation stage (the input
+    pipeline runs on CPU hosts — see data/synthetic.py)."""
+    for batch in batches:
+        yield translator(batch, drop_sparse=drop_sparse)

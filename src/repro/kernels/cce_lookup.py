@@ -15,6 +15,14 @@ accumulation loop, so the 2c gathers of Algorithm 3 are a single kernel
 launch.  The backward scatter-add is the transposed matmul
 ``onehot.T @ dout`` — same trick, and deterministic (no GPU-style atomics).
 
+The kernel is TABLE-COUNT-GENERIC: T is any stacked sub-table count
+(T=2 CCE, T=1 CE-concat / hashed / full tables), and a NEGATIVE row index
+is a free no-op sentinel — ``local == iota`` never matches, so the lane
+contributes exactly zero forward and exactly zero backward.  That is what
+lets the ``EmbeddingCollection`` fuse methods with different T into ONE
+supertable launch (a T=1 method pads its row tensor with -1; see
+DESIGN.md §6) without masks or extra branches in the kernel.
+
 Grid: (c columns, B/B_blk batch blocks, k/k_blk codebook blocks); the
 k axis is innermost so the output block revisits and accumulates.
 

@@ -79,7 +79,11 @@ def cce_lookup(
     k_blk: int | None = None,
 ) -> jax.Array:
     """Fused multi-table gather-sum: (c, B, T) idx + (c, T, k, dsub) tables
-    -> (B, c*dsub) embeddings.  Differentiable w.r.t. ``tables``."""
+    -> (B, c*dsub) embeddings.  Differentiable w.r.t. ``tables``.
+
+    Table-count-generic (any T) with the -1 no-op row sentinel (zero
+    forward contribution, zero gradient) — the universal-fusion contract
+    (see kernels/cce_lookup.py and DESIGN.md §6)."""
     k = tables.shape[2]
     if k_blk is None:
         k_blk = min(_cl.DEFAULT_K_BLK, _round_up(k, 128))

@@ -6,11 +6,15 @@ import jax.numpy as jnp
 
 
 def cce_lookup_ref(idx: jax.Array, tables: jax.Array) -> jax.Array:
-    """Reference for the fused CCE multi-column gather-sum.
+    """Reference for the fused multi-column gather-sum.
 
     Args:
       idx:    (c, B, T) int32 — per column, per batch element, T row indices
-              (T=2 for CCE main+helper, T=1 for plain CE-concat).
+              (T=2 for CCE main+helper, T=1 for plain CE-concat / hashed /
+              full tables).  A NEGATIVE index is the sentinel for "no
+              sub-table here" (a T=1 method riding a T=2 supertable): it
+              matches no one-hot lane, so it contributes exactly zero
+              forward and receives exactly zero gradient.
       tables: (c, T, k, dsub) — per column, T tables of k rows.
 
     Returns:
@@ -18,9 +22,12 @@ def cce_lookup_ref(idx: jax.Array, tables: jax.Array) -> jax.Array:
     """
     c, B, T = idx.shape
     _, _, k, dsub = tables.shape
-    # out[i, b] = sum_t tables[i, t, idx[i, b, t]]
+    # out[i, b] = sum_t [idx >= 0] * tables[i, t, idx[i, b, t]]
     gathered = jax.vmap(  # over columns
-        lambda ti, ii: sum(ti[t][ii[:, t]] for t in range(T))
+        lambda ti, ii: sum(
+            ti[t][jnp.maximum(ii[:, t], 0)] * (ii[:, t] >= 0)[:, None].astype(ti.dtype)
+            for t in range(T)
+        )
     )(tables, idx)  # (c, B, dsub)
     return jnp.transpose(gathered, (1, 0, 2)).reshape(B, c * dsub)
 

@@ -9,12 +9,15 @@ DLRM benchmark configuration the paper trains on Criteo.
 The 26 tables live behind an ``EmbeddingCollection`` (core/collection.py):
 fuse-compatible tables are stacked into grouped supertables and the whole
 forward issues O(n_groups) heavy lookups — for the compressed Criteo
-config that is ONE fused Pallas ``cce_lookup`` launch for all CCE tables
-plus one padded gather for the small full tables, instead of 26
-independent gathers.  ``params["emb"]``/``buffers["emb"]`` are in the
-collection's grouped layout; use ``cfg.collection.feature_params`` /
-``feature_buffers`` for a per-feature view, and
-``checkpoint_migrations(cfg)`` to restore pre-collection checkpoints.
+config that is ONE universal supertable launch for ALL 26 tables (CCE +
+small full tables share the fused Pallas ``cce_lookup``; DESIGN.md §6),
+instead of 26 independent gathers.  ``params["emb"]``/``buffers["emb"]``
+are in the collection's grouped layout; use
+``cfg.collection.feature_params`` / ``feature_buffers`` for a per-feature
+view, and ``checkpoint_migrations(cfg)`` to restore pre-collection
+checkpoints.  A host-translating pipeline (``data.translate``) may ship
+``batch["rows"]`` instead of raw ids — the device then never gathers the
+pointer tables.
 """
 from __future__ import annotations
 
@@ -27,7 +30,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embeddings as emb_lib
-from repro.core.collection import EmbeddingCollection, legacy_layout_migration
+from repro.core.collection import (
+    EmbeddingCollection,
+    grouped_layout_migration,
+    legacy_layout_migration,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +62,12 @@ class DLRMConfig:
     # deliberately so training exercises the exact kernel that ships to
     # TPU (this container's validation contract); set False for CPU speed.
     emb_use_kernel: bool | None = None
+    # collection grouping mode: "univ" (universal fusion — ONE heavy
+    # launch for the whole embedding stack on the compressed Criteo
+    # config), "group" (the pre-universal per-signature grouping) or
+    # "loop" (per-feature lookups).  The non-default modes exist as
+    # benchmark baselines (bench_kernels --fuse) and escape hatches.
+    emb_fuse: str = "univ"
     dtype: Any = jnp.float32
 
     @property
@@ -78,7 +91,8 @@ class DLRMConfig:
         """The grouped-table view — built ONCE per config (forward and the
         transition used to reconstruct every table object on every call)."""
         return EmbeddingCollection.build(
-            tuple(self._build_table(i) for i in range(self.n_sparse))
+            tuple(self._build_table(i) for i in range(self.n_sparse)),
+            mode=self.emb_fuse,
         )
 
     def table(self, i: int):
@@ -127,15 +141,21 @@ def init(key, cfg: DLRMConfig):
 
 
 def forward(params, buffers, cfg: DLRMConfig, batch):
-    """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits."""
+    """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits.
+
+    A host-translating input pipeline (``data.translate``, DESIGN.md §4)
+    ships ``batch["rows"]`` — pre-translated codebook row indices —
+    instead of (or alongside) ``batch["sparse"]``: the device program
+    then never gathers the (c, d1) pointer tables."""
     dense = batch["dense"].astype(cfg.dtype)
     x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
     use_kernel = cfg.emb_use_kernel
     if use_kernel is None:
         use_kernel = jax.default_backend() in ("tpu", "cpu")
     emb = cfg.collection.lookup_all(
-        params["emb"], buffers["emb"], batch["sparse"], use_kernel=use_kernel,
-    )  # (B, n_sparse, emb_dim) in O(n_groups) lookups
+        params["emb"], buffers["emb"], batch.get("sparse"),
+        use_kernel=use_kernel, rows=batch.get("rows"),
+    )  # (B, n_sparse, emb_dim) in O(n_groups) heavy lookups (ONE on Criteo)
     V = jnp.concatenate([x0[:, None, :], emb], axis=1)  # (B, 27, emb_dim)
     # pairwise dot interactions (upper triangle, no self)
     inter = jnp.einsum("bie,bje->bij", V, V)
@@ -204,16 +224,17 @@ def make_id_tracker(cfg: DLRMConfig, stream=None, *, key: str = "sparse"):
     vocab row — exact, but a second full-vocab array per feature).  A
     ``repro.stream.StreamConfig`` returns the sketch-backed tracker at
     vocab-independent memory, wired through the collection: only the
-    features that actually transition (the CCE groups) carry sketches —
+    features that actually transition (the CCE tables) carry sketches —
     full/loop tables never cluster, so their histograms would be dead
     weight.  Either tracker plugs into ``Trainer(id_tracker=...)`` and
     ``cluster_tables(id_counts=tracker.counts)`` unchanged."""
+    from repro.core.cce import CCE
     from repro.stream import IdFrequencyTracker, SketchFrequencyTracker
 
     if stream is None:
         return IdFrequencyTracker(cfg.vocab_sizes, key=key)
     tracked = tuple(
-        i for g in cfg.collection.groups if g.kind == "cce" for i in g.features
+        i for i, t in enumerate(cfg.collection.tables) if isinstance(t, CCE)
     )
     return SketchFrequencyTracker(
         cfg.vocab_sizes, stream, tracked=tracked, key=key
@@ -221,7 +242,18 @@ def make_id_tracker(cfg: DLRMConfig, stream=None, *, key: str = "sparse"):
 
 
 def checkpoint_migrations(cfg: DLRMConfig):
-    """``Trainer(migrations=...)`` entry for pre-collection checkpoints:
-    restores the legacy per-feature emb layout bit-exact into the grouped
-    supertables (params, optimizer moments, buffers, error feedback)."""
-    return [legacy_layout_migration(cfg.collection)]
+    """``Trainer(migrations=...)`` entries for every older emb layout:
+    the pre-collection per-feature layout AND the pre-universal grouped
+    layout (per-signature CCE slab + full buckets) both restore bit-exact
+    into today's supertables (params, optimizer moments, buffers, error
+    feedback)."""
+    migrations = [legacy_layout_migration(cfg.collection)]
+    grouped = EmbeddingCollection.build(cfg.collection.tables, mode="group")
+    same_layout = tuple((g.kind, g.features) for g in grouped.groups) == tuple(
+        (g.kind, g.features) for g in cfg.collection.groups
+    )
+    if not same_layout:
+        migrations.append(
+            grouped_layout_migration(cfg.collection, grouped)
+        )
+    return migrations

@@ -22,4 +22,5 @@ from repro.stream.tracker import (  # noqa: F401
     SketchFrequencyTracker,
     StreamConfig,
 )
+from repro.stream.device import make_step_cell_counter  # noqa: F401
 from repro.stream.trigger import ClusterTrigger, TriggerEvent  # noqa: F401

@@ -4,13 +4,16 @@ The host conservative-update path costs O(batch · depth) numpy work per
 step IN the training loop; at pod batch sizes that serializes against
 the jitted step.  This module removes tracking from the critical path:
 
-  * ``make_cell_counter`` builds ONE jitted function for all tracked
-    features: hash every id of the (B, F_tracked) sparse block with each
-    feature's multiply-shift coefficients (the SAME coefficients the
-    host sketch uses, so device cells == host cells) and segment-sum the
-    hits into an (F_tracked, depth, width) increment tensor — one
-    scatter-add launch, dispatched asynchronously by jax like any other
-    step work.
+  * ``cell_count_fn`` builds ONE pure function for all tracked features:
+    hash every id of the (B, F_tracked) sparse block with each feature's
+    multiply-shift coefficients (the SAME coefficients the host sketch
+    uses, so device cells == host cells) and segment-sum the hits into an
+    (F_tracked, depth, width) increment tensor.  ``make_step_cell_counter``
+    EMBEDS it into the jitted train step (``make_train_step(sketch_fn=)``)
+    so the delta rides the step's single launch — tracking adds zero
+    extra device dispatches; ``make_cell_counter`` is the standalone
+    jitted dispatcher (one extra async dispatch per batch) for trackers
+    running outside a train step.
   * ``AsyncFolder`` drains (device_delta, host_ids) pairs on a single
     background thread: the ``device_get`` of the delta and the
     O(unique-ids) head/ring bookkeeping block the FOLD thread, never the
@@ -29,11 +32,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def make_cell_counter(sketches):
-    """Jitted (B, F) int32 -> (F, depth, width) int32 cell-increment
-    counter over ``sketches`` (the tracked features' ``CountMinSketch``
-    objects, which must share width/depth — one ``StreamConfig`` builds
-    them, so they do)."""
+def cell_count_fn(sketches):
+    """PURE (B, F) int32 -> (F, depth, width) int32 cell-increment counter
+    over ``sketches`` (the tracked features' ``CountMinSketch`` objects,
+    which must share width/depth — one ``StreamConfig`` builds them, so
+    they do).  Not jitted: the caller either wraps it (the standalone
+    dispatcher below) or INLINES it into an already-jitted program — the
+    train step embeds it via ``make_step_cell_counter`` so sketch tracking
+    adds ZERO extra device dispatches (DESIGN.md §6)."""
     widths = {s.width for s in sketches}
     depths = {s.depth for s in sketches}
     if len(widths) != 1 or len(depths) != 1:
@@ -44,7 +50,6 @@ def make_cell_counter(sketches):
     b = jnp.asarray(np.stack([s.b for s in sketches]))
     shift = int(sketches[0].shift)
 
-    @jax.jit
     def count_cells(sparse):  # (B, F) int32
         x = sparse.T.astype(jnp.uint32)  # (F, B)
         cells = (a[:, :, None] * x[:, None, :] + b[:, :, None]) >> shift
@@ -57,6 +62,35 @@ def make_cell_counter(sketches):
         return delta.reshape(n_feat, depth, width)
 
     return count_cells
+
+
+def make_cell_counter(sketches):
+    """Standalone jitted dispatcher around ``cell_count_fn`` — the
+    tracker's own fallback path when the train step does not embed the
+    counter (one extra dispatch per batch)."""
+    return jax.jit(cell_count_fn(sketches))
+
+
+def make_step_cell_counter(tracker):
+    """The ``sketch_fn`` a ``SketchFrequencyTracker`` contributes to
+    ``train.loop.make_train_step``: microbatch dict -> (F_tracked, depth,
+    width) int32 cell delta, computed INSIDE the jitted step (selecting
+    the tracked sparse columns with the same hash coefficients the host
+    sketch uses, so in-step cells == host cells bit for bit).  Returns
+    None when the tracker has no sketch-backed features (dense tracker,
+    or nothing tracked) — the step then carries no delta."""
+    tracked = getattr(tracker, "tracked", None)
+    if not tracked:
+        return None
+    fn = cell_count_fn([tracker.features[f].cms for f in tracked])
+    cols = np.asarray(tracked)
+    key = tracker.key
+
+    def count(microbatch):
+        sparse = jnp.take(microbatch[key], jnp.asarray(cols), axis=1)
+        return fn(sparse.astype(jnp.int32))
+
+    return count
 
 
 class AsyncFolder:

@@ -138,9 +138,25 @@ class SketchFrequencyTracker:
         fallback; those tables never transition)."""
         return list(self.features)
 
-    def observe(self, batch: dict) -> None:
+    def observe(self, batch: dict, *, delta=None) -> None:
+        """Accumulate one (un-reshaped) batch.
+
+        ``delta`` — an (F_tracked, depth, width) cell-increment tensor the
+        TRAIN STEP already computed (``stream.device.make_step_cell_counter``
+        embedded in ``make_train_step(sketch_fn=)``): the sketch update
+        then costs zero extra device dispatches; only the O(unique-ids)
+        head/ring bookkeeping runs on host (off-thread with ``async_fold``,
+        synchronously otherwise — same FIFO per-batch fold either way, so
+        flushed state stays a pure function of the batch sequence and
+        restart-exactness is preserved)."""
         sparse = np.asarray(batch[self.key]).reshape(-1, len(self.features))
-        if self._folder is not None:
+        if delta is not None and self.tracked:
+            cols = np.ascontiguousarray(sparse[:, list(self.tracked)])
+            if self._folder is not None:
+                self._folder.submit((delta, cols))  # device_get off-thread
+            else:
+                self._fold((delta, cols))
+        elif self._folder is not None:
             import jax.numpy as jnp
 
             cols = np.ascontiguousarray(sparse[:, list(self.tracked)])

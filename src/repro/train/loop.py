@@ -89,6 +89,8 @@ def make_train_step(
     clip_norm: float = 1.0,
     compress_grads: bool = False,
     grad_specs: Pytree | None = None,
+    sketch_fn: Callable[[Pytree], jax.Array] | None = None,
+    donate: bool = False,
 ):
     """loss_fn(params, buffers, microbatch) -> (loss, metrics dict).
 
@@ -98,6 +100,20 @@ def make_train_step(
     cross-data reduction then lowers to a reduce-scatter instead of a full
     all-reduce — half the per-chip collective bytes on the dominant train
     collective (§Perf).
+
+    ``sketch_fn(microbatch) -> (F, depth, width) int32`` (see
+    ``stream.device.make_step_cell_counter``) embeds the frequency
+    tracker's cell counter IN the step: the per-microbatch deltas
+    accumulate across the gradient-accumulation scan and the summed delta
+    rides out in ``metrics["sketch_delta"]`` — sketch tracking then adds
+    ZERO extra device dispatches (the Trainer hands the delta to
+    ``tracker.observe(batch, delta=...)``).
+
+    ``donate=True`` returns the step already jitted with
+    ``donate_argnums=(0,)``: the TrainState's buffers (params, optimizer
+    moments, embedding buffers, error feedback) are donated and the update
+    happens in place — asserted via a lowering/donation check in
+    tests/test_train_loop.py.
     """
 
     def _constrain_grads(g):
@@ -122,18 +138,22 @@ def make_train_step(
             )
             gsum = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gsum, grads)
             gsum = _constrain_grads(gsum)
-            return (gsum, loss_sum + loss), None
+            # the sketch cell delta is a scan OUTPUT (summed below), not
+            # an extra dispatch: it lowers into the same program
+            delta = sketch_fn(mb) if sketch_fn is not None else None
+            return (gsum, loss_sum + loss), delta
 
         gzero = _constrain_grads(
             jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
         )
         if accum == 1:
             mb0 = jax.tree.map(lambda x: x[0], batch)
-            (grads, loss_sum), _ = micro((gzero, jnp.float32(0)), mb0)
+            (grads, loss_sum), delta = micro((gzero, jnp.float32(0)), mb0)
         else:
-            (grads, loss_sum), _ = jax.lax.scan(
+            (grads, loss_sum), deltas = jax.lax.scan(
                 micro, (gzero, jnp.float32(0)), batch
             )
+            delta = None if deltas is None else deltas.sum(axis=0)
         grads = jax.tree.map(lambda g: g / accum, grads)
         loss = loss_sum / accum
 
@@ -148,8 +168,13 @@ def make_train_step(
             params=new_params, opt=new_opt, ebuf=state.ebuf,
             step=state.step + 1, err=err,
         )
-        return new_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        if delta is not None:
+            metrics["sketch_delta"] = delta
+        return new_state, metrics
 
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0,))
     return train_step
 
 
@@ -267,6 +292,7 @@ class Trainer:
         cluster_max: int = 0,
         id_tracker=None,
         trigger=None,
+        translator=None,
         accum: int = 1,
         monitor: StragglerMonitor | None = None,
         failures: FailureInjector | None = None,
@@ -300,6 +326,13 @@ class Trainer:
                     "(SketchFrequencyTracker with StreamConfig(window>0)); "
                     "the adaptive schedule will never evaluate"
                 )
+        # host-translating pipelines (data.translate.HostTranslator
+        # wrapped around data_iter) mirror the pointer buffers — the
+        # mirrors go stale the moment a transition rewrites ptr/hs, so
+        # the Trainer re-syncs the translator after every transition and
+        # after a checkpoint restore (translate_batches is lazy: the
+        # next batch already uses the fresh mirrors)
+        self.translator = translator
         self.clusters_done = 0
         self.accum = accum
         self.monitor = monitor or StragglerMonitor()
@@ -330,14 +363,22 @@ class Trainer:
             if self.failures is not None:
                 self.failures.maybe_fail(step)
             raw = next(self.data_iter)
-            if self.id_tracker is not None:
-                self.id_tracker.observe(raw)
             batch = self._reshape_accum(raw)
             t0 = time.perf_counter()
             self.state, metrics = self.train_step(self.state, batch)
             jax.block_until_ready(self.state.params)
             dt = time.perf_counter() - t0
             self.monitor.observe(step, dt)
+            # a step built with sketch_fn= already computed the tracker's
+            # cell delta inside its single launch — hand it over so the
+            # tracker skips its own counter dispatch (zero extra
+            # dispatches; the host head/ring bookkeeping is unchanged)
+            delta = metrics.pop("sketch_delta", None)
+            if self.id_tracker is not None:
+                if delta is not None:
+                    self.id_tracker.observe(raw, delta=delta)
+                else:
+                    self.id_tracker.observe(raw)
             self.history.append({k: float(v) for k, v in metrics.items()} | {"step": step})
 
             new_step = step + 1
@@ -387,6 +428,8 @@ class Trainer:
                     params=params, ebuf=dyn, opt=opt, err=err
                 )
                 self.clusters_done += 1
+                if self.translator is not None:  # ptr/hs mirrors went stale
+                    self.translator.update(buffers["emb"])
 
             if self.ckpt and self.ckpt_every and new_step % self.ckpt_every == 0:
                 self.ckpt.save_async(new_step, self._ckpt_tree())
@@ -502,7 +545,16 @@ class Trainer:
                 pairs.append((chained_old, chained_new))
         for to_old, to_new in pairs:
             for t in templates:
-                old_t = to_old(t)
+                try:
+                    old_t = to_old(t)
+                except (KeyError, IndexError, TypeError, ValueError):
+                    # two migrations along the SAME axis (e.g. two emb
+                    # layout converters) don't compose — the structural
+                    # mismatch is expected and the chain is simply not a
+                    # candidate layout.  Anything else (AttributeError
+                    # from a buggy migration, MemoryError, ...) is a real
+                    # defect and propagates.
+                    continue
                 candidates.append((old_t, to_new))
                 with_counts = self._with_id_counts_placeholder(old_t)
                 if with_counts is not None:
@@ -547,4 +599,8 @@ class Trainer:
                     "checkpoint had no trigger section; trigger restarted "
                     "fresh from the restored step"
                 )
+        if self.translator is not None:  # mirrors must match restored ptr/hs
+            self.translator.update(
+                merge_buffers(self.state.ebuf, self.static_buffers)["emb"]
+            )
         return step

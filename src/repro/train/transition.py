@@ -116,23 +116,32 @@ def transition_collection(
     """Transition every CCE table behind an ``EmbeddingCollection``.
 
     ``emb_params``/``emb_buffers`` are the GROUPED layout; each CCE
-    feature's (c, 2, k, dsub) block is sliced out, transitioned with
+    feature's (c, 2, k, dsub) block is sliced out of its (possibly
+    method-mixed universal) group, transitioned with
     ``jax.random.fold_in(key, feature_index)`` (the same key schedule as
     the legacy per-table loop, so transitions replay identically from a
-    checkpoint), and re-stacked.  Returns ``(new_params, new_buffers,
-    update_emb)`` where ``update_emb`` transforms a grouped moments["emb"]
-    list group-wise (see ``optim.remap.collection_moment_updater``).
-    ``id_counts`` indexes per-feature histograms by GLOBAL feature index.
+    checkpoint), and re-stacked; a group's non-CCE members (full/hash/ce
+    tables sharing the supertable launch) pass through untouched.
+    Returns ``(new_params, new_buffers, update_emb)`` where ``update_emb``
+    transforms a grouped moments["emb"] list group-wise (see
+    ``optim.remap.collection_moment_updater``).  ``id_counts`` indexes
+    per-feature histograms by GLOBAL feature index.
     """
+    from repro.core.cce import CCE
+
     new_p, new_b = list(emb_params), list(emb_buffers)
     group_updates: dict[int, dict[int, object]] = {}
     for g, grp in enumerate(coll.groups):
-        if grp.kind != "cce":
+        cce_locals = [
+            f_local for f_local, t in enumerate(grp.tables) if isinstance(t, CCE)
+        ]
+        if not cce_locals:
             continue
         per_p = coll.unstack_group_params(grp, emb_params[g])
         per_b = list(emb_buffers[g])
         fns = {}
-        for f_local, i in enumerate(grp.features):
+        for f_local in cce_locals:
+            i = grp.features[f_local]
             per_p[f_local], per_b[f_local], fns[f_local] = transition_table(
                 grp.tables[f_local], jax.random.fold_in(key, i),
                 per_p[f_local], per_b[f_local],

@@ -28,6 +28,45 @@ def test_cce_lookup_matches_ref(c, T, B, k, dsub, dtype):
     )
 
 
+def test_cce_lookup_sentinel_rows_are_noops():
+    """The -1 sentinel (a T=1 method riding a T=2 supertable, DESIGN.md
+    §6): sentinel lanes contribute EXACTLY zero forward and receive
+    EXACTLY zero gradient — so a fused single-sub-table method equals its
+    plain gather bit for bit and its zero-padded helper slab stays zero."""
+    key = jax.random.PRNGKey(3)
+    c, B, T, k, dsub = 3, 33, 2, 70, 8
+    rows0 = jax.random.randint(key, (c, B), 0, k)
+    idx = jnp.stack([rows0, jnp.full((c, B), -1, jnp.int32)], axis=-1)
+    tables = jax.random.normal(key, (c, T, k, dsub), jnp.float32)
+
+    got = ops.cce_lookup(idx, tables)
+    # == the single-table gather, bitwise (adding exact zeros is exact)
+    want = jax.vmap(lambda t, r: t[r])(tables[:, 0], rows0)  # (c, B, dsub)
+    want = jnp.transpose(want, (1, 0, 2)).reshape(B, c * dsub)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the masked ref agrees
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.cce_lookup_ref(idx, tables))
+    )
+    # gradient: the sentinel sub-table gets exactly zero everywhere
+    g = jax.grad(lambda t: jnp.sum(ops.cce_lookup(idx, t) ** 2))(tables)
+    assert float(jnp.abs(g[:, 1]).max()) == 0.0
+    assert float(jnp.abs(g[:, 0]).max()) > 0.0
+
+
+def test_cce_lookup_single_table_T1():
+    """T=1 (hash/CE/full tables fused without sentinel padding): the
+    kernel is table-count-generic and matches the plain gather."""
+    key = jax.random.PRNGKey(4)
+    c, B, k, dsub = 5, 17, 40, 16
+    idx = jax.random.randint(key, (c, B, 1), 0, k)
+    tables = jax.random.normal(key, (c, 1, k, dsub), jnp.float32)
+    got = ops.cce_lookup(idx, tables)
+    want = jax.vmap(lambda t, r: t[r])(tables[:, 0], idx[..., 0])
+    want = jnp.transpose(want, (1, 0, 2)).reshape(B, c * dsub)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @given(
     b=st.integers(1, 40), k=st.integers(2, 90), dsub=st.sampled_from([4, 8, 16])
 )

@@ -378,8 +378,10 @@ def _setup(seed=0, cap=512):
 def test_make_id_tracker_tracks_only_cce_features():
     cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
     tr = dlrm.make_id_tracker(cfg, dlrm_criteo.reduced_stream())
+    from repro.core.cce import CCE
+
     cce_feats = {
-        i for g in cfg.collection.groups if g.kind == "cce" for i in g.features
+        i for i, t in enumerate(cfg.collection.tables) if isinstance(t, CCE)
     }
     assert set(tr.tracked) == cce_feats
     for i in range(cfg.n_sparse):

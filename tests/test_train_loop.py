@@ -130,6 +130,159 @@ def test_cluster_callback_runs_and_training_continues():
         [h["loss"] for h in hist[:5]]) + 0.05
 
 
+def test_train_state_donated_no_copy():
+    """The jitted step donates the whole TrainState (params, moments,
+    embedding buffers, step counter): every state leaf must carry an
+    input-output alias in the lowered program — the in-place-update
+    contract behind the single-launch hot path."""
+    cfg, _, state, static, data = _setup()
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(
+        loss_fn, opt, lambda s: jnp.float32(0.05), static, donate=True
+    )
+    batch = {
+        k: np.asarray(v)[None] for k, v in next(data).items() if k != "step"
+    }
+    lowered = step.lower(state, batch)
+    txt = lowered.as_text()
+    n_state_leaves = len(jax.tree.leaves(state))
+    # every donated state buffer aliases an output (tf.aliasing_output is
+    # how StableHLO records jit donation); batch leaves are not donated
+    assert txt.count("tf.aliasing_output") >= n_state_leaves, txt[:2000]
+    # and the donated step still runs + matches the undonated math (up to
+    # compilation-level float reassociation — donation changes the
+    # program XLA sees, not the math)
+    ref_step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    s_ref, m_ref = ref_step(state, batch)
+    s_don, m_don = step(state, batch)
+    np.testing.assert_allclose(float(m_don["loss"]), float(m_ref["loss"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(s_don.params), jax.tree.leaves(s_ref.params)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-7
+        )
+
+
+def _setup_sketch(in_step: bool, seed=0, accum=1, window=4):
+    from repro.configs import dlrm_criteo as dc
+    from repro.stream import make_step_cell_counter
+
+    cfg = dc.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    tracker = dlrm.make_id_tracker(
+        cfg, dc.reduced_stream(window=window, async_fold=True)
+    )
+    sketch_fn = make_step_cell_counter(tracker) if in_step else None
+    step = make_train_step(
+        loss_fn, opt, lambda s: jnp.float32(0.05), static,
+        accum=accum, sketch_fn=sketch_fn, donate=True,
+    )
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed), 32 * accum
+    )
+    return cfg, step, state, static, data, tracker
+
+
+def test_in_step_sketch_delta_matches_dispatch_path():
+    """The cell delta produced INSIDE the donated train step must leave
+    the tracker in bit-identical state to the PR-4 standalone-dispatch
+    path — and the tracker's own counter must never be dispatched."""
+    _, step_a, state_a, static_a, data_a, tk_a = _setup_sketch(False)
+    tr_a = Trainer(step_a, state_a, static_a, data_a, id_tracker=tk_a)
+    tr_a.run(9)
+    tk_a.flush()
+
+    _, step_b, state_b, static_b, data_b, tk_b = _setup_sketch(True)
+
+    def boom(*a, **k):
+        raise AssertionError("tracker dispatched its own cell counter")
+
+    tk_b._cell_counter = boom  # the in-step delta must make this dead code
+    tr_b = Trainer(step_b, state_b, static_b, data_b, id_tracker=tk_b)
+    tr_b.run(9)
+    tk_b.flush()
+
+    for a, b in zip(tk_a.state_tree(), tk_b.state_tree()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the training math is untouched by carrying the delta
+    for a, b in zip(
+        jax.tree.leaves(tr_a.state.params), jax.tree.leaves(tr_b.state.params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_in_step_sketch_delta_accumulates_over_microbatches():
+    """accum > 1: the per-microbatch deltas sum across the scan, so the
+    tracker sees the WHOLE batch exactly once (window=0: no decay, so
+    the folded mass is exactly the id count)."""
+    _, step1, state1, static1, data1, tk1 = _setup_sketch(True, accum=1, window=0)
+    _, step2, state2, static2, data2, tk2 = _setup_sketch(True, accum=2, window=0)
+    tr1 = Trainer(step1, state1, static1, data1, id_tracker=tk1, accum=1)
+    tr2 = Trainer(step2, state2, static2, data2, id_tracker=tk2, accum=2)
+    tr1.run(4)
+    tr2.run(4)
+    tk1.flush()
+    tk2.flush()
+    # accum=2 consumed 64-id batches vs accum=1's 32-id batches: compare
+    # total folded mass instead of bitwise state (different streams)
+    m1 = sum(tk1.features[f].mass for f in tk1.tracked)
+    m2 = sum(tk2.features[f].mass for f in tk2.tracked)
+    assert m1 == 4 * 32 * len(tk1.tracked)
+    assert m2 == 4 * 64 * len(tk2.tracked)
+
+
+def test_in_step_sketch_restart_exact(tmp_path):
+    """Checkpoint resume with the in-step delta path: kill at step 7,
+    restore, replay — params AND tracker state bitwise equal to the
+    uninterrupted run."""
+
+    def run(fail: bool):
+        cfg, step, state, static, data, tracker = _setup_sketch(True, seed=2)
+        tr = Trainer(
+            step, state, static, data,
+            ckpt_dir=str(tmp_path / ("a" if fail else "b")), ckpt_every=5,
+            id_tracker=tracker,
+            failures=FailureInjector((7,)) if fail else None,
+        )
+        if fail:
+            with pytest.raises(RuntimeError):
+                tr.run(12)
+            restored = tr.restore_latest()
+            assert restored == 5
+            _, step2, _, static2, _, tracker2 = _setup_sketch(True, seed=2)
+            tracker2.load_state_tree(tracker.state_tree())
+            data2 = clickstream_batches(
+                ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=2),
+                32, start_step=restored,
+            )
+            tr2 = Trainer(
+                step2, tr.state, static2, data2,
+                ckpt_dir=str(tmp_path / "a"), id_tracker=tracker2,
+            )
+            tr2.run(12 - restored)
+            return tr2.state, tracker2
+        tr.run(12)
+        return tr.state, tracker
+
+    (s_fail, tk_fail), (s_clean, tk_clean) = run(True), run(False)
+    for a, b in zip(jax.tree.leaves(s_fail.params), jax.tree.leaves(s_clean.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tk_fail.flush()
+    tk_clean.flush()
+    for a, b in zip(tk_fail.state_tree(), tk_clean.state_tree()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_straggler_monitor_flags_outliers():
     mon = StragglerMonitor(warmup=3, k=3.0)
     for i in range(20):
