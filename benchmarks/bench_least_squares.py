@@ -11,7 +11,6 @@ Emits CSV rows: name,iteration,loss.
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import least_squares as ls
@@ -33,18 +32,18 @@ def run(n=2000, d1=400, d2=10, k=40, iters=25, seed=0):
     t0 = time.time()
     dense = ls.dense_cce(kr, X, Y, k, iters)
     t_dense = time.time() - t0
-    for i, l in enumerate(np.asarray(dense.losses)):
-        rows.append(("dense_cce", i, float(l)))
+    for i, loss_val in enumerate(np.asarray(dense.losses)):
+        rows.append(("dense_cce", i, float(loss_val)))
 
     smart = ls.dense_cce(kr, X, Y, k, iters, smart_noise=True)
-    for i, l in enumerate(np.asarray(smart.losses)):
-        rows.append(("dense_cce_smart_noise", i, float(l)))
+    for i, loss_val in enumerate(np.asarray(smart.losses)):
+        rows.append(("dense_cce_smart_noise", i, float(loss_val)))
 
     t0 = time.time()
     sparse = ls.sparse_cce(kr, X, Y, k, iters)
     t_sparse = time.time() - t0
-    for i, l in enumerate(np.asarray(sparse.losses)):
-        rows.append(("sparse_cce", i, float(l)))
+    for i, loss_val in enumerate(np.asarray(sparse.losses)):
+        rows.append(("sparse_cce", i, float(loss_val)))
 
     for ones in (1, 2):
         T = ls.kmeans_factorize(kr, T_star, k, ones_per_row=ones)

@@ -1,0 +1,77 @@
+"""Static analysis over traced jaxprs, lowered HLO, and source ASTs.
+
+Public surface:
+
+  * walker   — ``walk``/``count_primitive``/``used_var_ids`` (the single
+               shared jaxpr traversal; tests use these instead of local
+               copies)
+  * program  — ``AuditProgram.capture`` (abstract capture + input labels)
+  * rules    — the registry (``RULES``) and shipped rule dataclasses
+  * audit    — per-entry-point specs, ``run_audit``, the JSON ``Report``
+  * source_rules — stdlib-only AST rules (usable without jax)
+
+Exports resolve lazily (PEP 562) so ``repro.analysis.source_rules`` and
+the ``--source-only`` CLI path import WITHOUT jax — the lint CI job runs
+them in a bare interpreter.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # walker
+    "walk": "repro.analysis.walker",
+    "count_primitive": "repro.analysis.walker",
+    "primitive_counts": "repro.analysis.walker",
+    "used_var_ids": "repro.analysis.walker",
+    "sub_jaxprs": "repro.analysis.walker",
+    "iter_consts": "repro.analysis.walker",
+    "EqnSite": "repro.analysis.walker",
+    # program
+    "AuditProgram": "repro.analysis.program",
+    "label_matches": "repro.analysis.program",
+    # rules
+    "Finding": "repro.analysis.rules",
+    "Rule": "repro.analysis.rules",
+    "RULES": "repro.analysis.rules",
+    "register": "repro.analysis.rules",
+    "audit_program": "repro.analysis.rules",
+    "LaunchBudget": "repro.analysis.rules",
+    "NoDeviceGatherOf": "repro.analysis.rules",
+    "DonationCoverage": "repro.analysis.rules",
+    "DtypeHygiene": "repro.analysis.rules",
+    "NoHostCallback": "repro.analysis.rules",
+    "NoTransfers": "repro.analysis.rules",
+    "ConstantCapture": "repro.analysis.rules",
+    "DeadInput": "repro.analysis.rules",
+    # audit
+    "AuditSpec": "repro.analysis.audit",
+    "AUDIT_CONFIGS": "repro.analysis.audit",
+    "dlrm_audits": "repro.analysis.audit",
+    "run_audit": "repro.analysis.audit",
+    "Report": "repro.analysis.audit",
+    # source rules (jax-free)
+    "SourceFinding": "repro.analysis.source_rules",
+    "run_source_rules": "repro.analysis.source_rules",
+    "check_source_file": "repro.analysis.source_rules",
+    "SOURCE_RULE_IDS": "repro.analysis.source_rules",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.analysis' has no attribute {name!r}"
+        ) from None
+    import importlib
+
+    module = importlib.import_module(module_name)
+    value = getattr(module, name)
+    globals()[name] = value  # cache for the next access
+    return value
+
+
+def __dir__():
+    return __all__

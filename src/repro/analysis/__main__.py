@@ -1,0 +1,94 @@
+"""``python -m repro.analysis`` — the audit gate CI runs.
+
+Two layers, selectable independently:
+
+  * jaxpr/HLO audit (``--config``, default ``dlrm_criteo``): trace the
+    config's entry points abstractly and run their rule bundles.
+  * AST source rules (always on unless ``--jaxpr-only``): stdlib-only,
+    so ``--source-only`` works in an environment without jax — that is
+    what the lint CI job runs.
+
+Exit status 1 iff any error-severity finding; ``--json PATH`` writes the
+structured report (CI uploads it as ``AUDIT_report.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis over traced jaxprs, lowerings, and source",
+    )
+    p.add_argument("--config", default="dlrm_criteo",
+                   help="audit config name (default: dlrm_criteo)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the JSON report here ('-' for stdout)")
+    p.add_argument("--source-only", action="store_true",
+                   help="run only the AST source rules (no jax import)")
+    p.add_argument("--jaxpr-only", action="store_true",
+                   help="skip the AST source rules")
+    p.add_argument("--source-root", default="src/repro",
+                   help="directory the source rules walk")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print registered rule ids and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis.rules import RULES
+        from repro.analysis.source_rules import SOURCE_RULE_IDS
+
+        for rid in sorted(RULES):
+            print(f"jaxpr   {rid}")
+        for rid in SOURCE_RULE_IDS:
+            print(f"source  {rid}")
+        return 0
+
+    report_dict: dict = {"ok": True}
+    n_errors = 0
+
+    if not args.jaxpr_only:
+        from repro.analysis.source_rules import run_source_rules
+
+        src_findings = run_source_rules(args.source_root)
+        report_dict["source_findings"] = [f.to_dict() for f in src_findings]
+        for f in src_findings:
+            if f.severity == "error":
+                n_errors += 1
+            print(f"[{f.rule}] {f.path}:{f.line}: {f.message}",
+                  file=sys.stderr)
+
+    if not args.source_only:
+        from repro.analysis.audit import run_audit  # imports jax
+
+        report = run_audit(args.config)
+        report_dict.update(report.to_dict())
+        for f in report.findings:
+            if f.severity == "error":
+                n_errors += 1
+            where = f" at {f.where}" if f.where else ""
+            print(f"[{f.rule}] {f.program}{where}: {f.message}",
+                  file=sys.stderr)
+
+    report_dict["ok"] = n_errors == 0
+    text = json.dumps(report_dict, indent=2)
+    if args.json == "-":
+        print(text)
+    elif args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+
+    label = "AUDIT PASS" if n_errors == 0 else f"AUDIT FAIL ({n_errors} errors)"
+    print(label, file=sys.stderr)
+    return 0 if n_errors == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,277 @@
+"""Per-entry-point audit specs + the report the CLI/CI gate consumes.
+
+An ``AuditSpec`` bundles one jitted entry point (built lazily, captured
+ABSTRACTLY — ``jax.eval_shape`` + ``ShapeDtypeStruct`` inputs, so the
+full Criteo config audits without allocating its 33M-row pointer tables)
+with the rule instances that encode its invariants.  ``run_audit`` runs
+a named config's whole bundle and returns a ``Report`` that serializes
+to ``AUDIT_report.json`` and carries the CI exit code.
+
+The ``dlrm_criteo`` bundle audits the four canonical programs:
+
+  * ``fwd``          — DLRM forward: ONE pallas launch, clean dtypes,
+                       no callbacks/transfers/large consts.
+  * ``grad``         — loss gradient: exactly TWO launches (fwd + the
+                       transposed one-hot scatter-add bwd).
+  * ``train_step``   — the donated step WITH the in-step sketch counter:
+                       still two launches (sketch tracking adds zero
+                       dispatches), every TrainState leaf aliased to an
+                       output, nothing dead but the transition-only
+                       ``epoch`` counters.
+  * ``serve_lookup`` — the host-translated inference lookup: one launch
+                       and ZERO reads of the ptr/hs pointer tables
+                       (DESIGN.md §4's pod contract).
+
+ROADMAP items 1–3 (sharded supertable, serve engine, quantized slabs)
+should land by ADDING specs here — their invariants become checkable
+before the systems are built.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+from repro.analysis.program import AuditProgram
+from repro.analysis.rules import (
+    ConstantCapture,
+    DeadInput,
+    DonationCoverage,
+    DtypeHygiene,
+    Finding,
+    LaunchBudget,
+    NoDeviceGatherOf,
+    NoHostCallback,
+    NoTransfers,
+    Rule,
+    audit_program,
+)
+from repro.analysis.walker import primitive_counts
+
+# epoch is the CCE transition counter: it must RIDE the dynamic buffers
+# (PR 1 — a static leaf would freeze the transition schedule into the
+# program) but no lookup/step program reads it — dead by contract.
+_EPOCH_ALLOW = ("epoch",)
+
+_HYGIENE: tuple[Rule, ...] = (
+    DtypeHygiene(),
+    NoHostCallback(),
+    NoTransfers(),
+    ConstantCapture(),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditSpec:
+    """One entry point: a thunk building the captured program (lazy —
+    building traces/loads jax) plus the rules that must hold on it."""
+
+    name: str
+    build: Callable[[], AuditProgram]
+    rules: tuple[Rule, ...]
+
+
+def _abstract_dlrm(cfg):
+    """(params, buffers) ShapeDtypeStruct trees — zero allocation."""
+    import jax
+
+    from repro.models import dlrm
+
+    return jax.eval_shape(lambda: dlrm.init(jax.random.PRNGKey(0), cfg))
+
+
+def _batch_struct(cfg, batch_size: int, *, label: bool):
+    import jax
+    import jax.numpy as jnp
+
+    batch = {
+        "dense": jax.ShapeDtypeStruct((batch_size, cfg.n_dense), jnp.float32),
+        "sparse": jax.ShapeDtypeStruct((batch_size, cfg.n_sparse), jnp.int32),
+    }
+    if label:
+        batch["label"] = jax.ShapeDtypeStruct((batch_size,), jnp.float32)
+    return batch
+
+
+def _build_fwd(cfg, batch_size):
+    from repro.models import dlrm
+
+    params, buffers = _abstract_dlrm(cfg)
+    batch = _batch_struct(cfg, batch_size, label=False)
+    return AuditProgram.capture(
+        lambda p, b, bt: dlrm.forward(p, b, cfg, bt),
+        params, buffers, batch, name="fwd",
+    )
+
+
+def _build_grad(cfg, batch_size):
+    import jax
+
+    from repro.models import dlrm
+
+    params, buffers = _abstract_dlrm(cfg)
+    batch = _batch_struct(cfg, batch_size, label=True)
+    return AuditProgram.capture(
+        lambda p, b, bt: jax.grad(
+            lambda q: dlrm.bce_loss(q, b, cfg, bt)
+        )(p),
+        params, buffers, batch, name="grad",
+    )
+
+
+def _build_train_step(cfg, batch_size, stream_cfg):
+    import jax
+
+    from repro.models import dlrm
+    from repro.optim import sgd
+    from repro.stream import make_step_cell_counter
+    from repro.train.loop import init_state, make_train_step, split_buffers
+
+    import jax.numpy as jnp
+
+    params, buffers = _abstract_dlrm(cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    sketch_fn = None
+    if stream_cfg is not None:
+        sketch_fn = make_step_cell_counter(dlrm.make_id_tracker(cfg, stream_cfg))
+    step = make_train_step(
+        loss_fn, opt, lambda s: jnp.float32(0.05), static,
+        sketch_fn=sketch_fn, donate=True,
+    )
+    state = jax.eval_shape(lambda: init_state(params, opt, dyn))
+    batch = {
+        k: jax.ShapeDtypeStruct((1, *v.shape), v.dtype)
+        for k, v in _batch_struct(cfg, batch_size, label=True).items()
+    }
+    return AuditProgram.capture(
+        step, state, batch, name="train_step", donate_argnums=(0,),
+    )
+
+
+def _build_serve_lookup(cfg, batch_size):
+    import jax
+    import jax.numpy as jnp
+
+    coll = cfg.collection
+    params, buffers = _abstract_dlrm(cfg)
+    rows = jax.ShapeDtypeStruct(
+        (batch_size, coll.rows_n_cols, coll.rows_n_tables), jnp.int32
+    )
+    return AuditProgram.capture(
+        lambda p, b, r: coll.lookup_all(p, b, None, use_kernel=True, rows=r),
+        params["emb"], buffers["emb"], rows, name="serve_lookup",
+    )
+
+
+def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
+    """The canonical DLRM audit bundle for any DLRMConfig."""
+    return (
+        AuditSpec(
+            "fwd",
+            lambda: _build_fwd(cfg, batch_size),
+            (LaunchBudget(1), DeadInput(allow=_EPOCH_ALLOW), *_HYGIENE),
+        ),
+        AuditSpec(
+            "grad",
+            lambda: _build_grad(cfg, batch_size),
+            (LaunchBudget(2), *_HYGIENE),
+        ),
+        AuditSpec(
+            "train_step",
+            lambda: _build_train_step(cfg, batch_size, stream_cfg),
+            (
+                LaunchBudget(2),
+                DonationCoverage(),
+                DeadInput(allow=_EPOCH_ALLOW),
+                *_HYGIENE,
+            ),
+        ),
+        AuditSpec(
+            "serve_lookup",
+            lambda: _build_serve_lookup(cfg, batch_size),
+            (
+                LaunchBudget(1),
+                NoDeviceGatherOf(("ptr", "hs")),
+                DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
+                *_HYGIENE,
+            ),
+        ),
+    )
+
+
+def _dlrm_criteo_specs():
+    from repro.configs import dlrm_criteo
+
+    return dlrm_audits(dlrm_criteo.CONFIG, dlrm_criteo.STREAM)
+
+
+def _dlrm_criteo_reduced_specs():
+    from repro.configs import dlrm_criteo
+
+    return dlrm_audits(
+        dlrm_criteo.reduced(emb_method="cce", cap=512),
+        dlrm_criteo.reduced_stream(),
+    )
+
+
+# config name -> thunk returning the spec tuple (thunks: importing a
+# config loads jax; the CLI must stay importable without it)
+AUDIT_CONFIGS: dict[str, Callable[[], tuple[AuditSpec, ...]]] = {
+    "dlrm_criteo": _dlrm_criteo_specs,
+    "dlrm_criteo_reduced": _dlrm_criteo_reduced_specs,
+}
+
+
+@dataclasses.dataclass
+class Report:
+    """One audit run: per-program rule coverage + structured findings."""
+
+    config: str
+    programs: list[dict]
+    findings: list[Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not any(f.severity == "error" for f in self.findings)
+
+    def to_dict(self) -> dict:
+        return {
+            "config": self.config,
+            "ok": self.ok,
+            "programs": self.programs,
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=2, **kw)
+
+
+def run_audit(config: str) -> Report:
+    """Build + audit every entry point of a named config."""
+    try:
+        specs = AUDIT_CONFIGS[config]()
+    except KeyError:
+        raise SystemExit(
+            f"unknown audit config {config!r}; have {sorted(AUDIT_CONFIGS)}"
+        ) from None
+    programs, findings = [], []
+    for spec in specs:
+        prog = spec.build()
+        found = audit_program(prog, spec.rules)
+        findings.extend(found)
+        programs.append({
+            "name": spec.name,
+            "rules": [r.id for r in spec.rules],
+            "n_findings": len(found),
+            "n_eqns_by_primitive": {
+                k: v for k, v in sorted(
+                    primitive_counts(prog.closed).items()
+                ) if k in ("pallas_call", "scan", "while", "cond", "pjit")
+            },
+        })
+    return Report(config=config, programs=programs, findings=findings)

@@ -1,0 +1,100 @@
+"""Capture a jitted entry point as an auditable program.
+
+``AuditProgram.capture`` traces a callable to a closed jaxpr (abstract —
+``jax.ShapeDtypeStruct`` args work, so the FULL Criteo config audits with
+zero array allocation) and labels every flattened input variable with its
+pytree path (``[1]['emb'][0][2]['ptr']``).  Rules then talk about inputs
+by *name* — "the ptr buffers", "the donated state leaves" — instead of by
+flat position, which is what makes audit specs declarative.
+
+Lowering (for donation/aliasing rules) is lazy and cached: tracing is
+milliseconds, lowering the full train step is seconds, and most rules
+only need the jaxpr.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+
+
+def _tree_labels(args) -> tuple[str, ...]:
+    flat = jax.tree_util.tree_leaves_with_path(args)
+    return tuple(jax.tree_util.keystr(path) for path, _ in flat)
+
+
+def label_matches(label: str, names: tuple[str, ...]) -> bool:
+    """True when the pytree path ``label`` passes through a dict key in
+    ``names`` (``[0]['emb'][1]['ptr']`` matches name ``ptr``)."""
+    return any(re.search(rf"\['{re.escape(n)}'\]", label) for n in names)
+
+
+@dataclasses.dataclass
+class AuditProgram:
+    """One traced entry point: the closed jaxpr, a label per flat input
+    variable, and (lazily) the lowered StableHLO text."""
+
+    name: str
+    closed: Any
+    invar_labels: tuple[str, ...]
+    n_donated: int = 0
+    _lower_thunk: Callable[[], str] | None = None
+    _lowered_text: str | None = None
+
+    @classmethod
+    def capture(
+        cls,
+        fn: Callable,
+        *args,
+        name: str = "program",
+        donate_argnums: tuple[int, ...] = (),
+    ) -> "AuditProgram":
+        """Trace ``fn(*args)``; args may be arrays or ShapeDtypeStructs.
+
+        ``donate_argnums`` drives the donation-coverage accounting AND the
+        lowering: if ``fn`` is already jitted (has ``.lower``) its own
+        donation settings are used, otherwise the capture jits it with
+        exactly these argnums.
+        """
+        closed = jax.make_jaxpr(fn)(*args)
+        labels = _tree_labels(args)
+        if len(labels) != len(closed.jaxpr.invars):
+            # tracing didn't flatten 1:1 (static args, captured trees):
+            # label-based rules will refuse rather than silently misbind
+            labels = ()
+        n_donated = sum(
+            len(jax.tree_util.tree_leaves(args[i])) for i in donate_argnums
+        )
+
+        def lower() -> str:
+            jitted = fn if hasattr(fn, "lower") else jax.jit(
+                fn, donate_argnums=donate_argnums
+            )
+            return jitted.lower(*args).as_text()
+
+        return cls(
+            name=name,
+            closed=closed,
+            invar_labels=labels,
+            n_donated=n_donated,
+            _lower_thunk=lower,
+        )
+
+    @property
+    def lowered_text(self) -> str:
+        if self._lowered_text is None:
+            if self._lower_thunk is None:
+                raise RuntimeError(
+                    f"program {self.name!r} was built without a lowering"
+                )
+            self._lowered_text = self._lower_thunk()
+        return self._lowered_text
+
+    def labeled_invars(self) -> tuple[tuple[str, Any], ...]:
+        """(label, invar) pairs; empty labels mean capture couldn't match
+        flat inputs to tree paths (rules that need names must complain)."""
+        if not self.invar_labels:
+            return ()
+        return tuple(zip(self.invar_labels, self.closed.jaxpr.invars))

@@ -1,0 +1,350 @@
+"""Declarative rule registry over traced/lowered programs.
+
+Each rule is a small dataclass with a stable ``id`` and a
+``check(program) -> [Finding]`` method; ``audit_program`` runs a rule
+list against one ``AuditProgram`` and concatenates the structured
+findings (rule id, severity, program, eqn path / input label, human
+message).  The registry exists so the CLI can enumerate shipped rules
+and so audit specs (analysis/audit.py) stay data: a list of rule
+instances per entry point.
+
+Shipped rules encode the invariants PRs 3–5 fought for:
+
+  * ``LaunchBudget``      — pallas_call count per program (26 → 3 → 1)
+  * ``NoDeviceGatherOf``  — host-translated rows mean the device program
+                            must never consume the ptr/hs tables
+  * ``DonationCoverage``  — every donated leaf carries an input-output
+                            alias in the lowering (in-place TrainState)
+  * ``DtypeHygiene``      — no f64/complex leaks on the hot path
+  * ``NoHostCallback``    — no pure/io/debug callbacks inside the step
+  * ``NoTransfers``       — no device_put inside the traced program
+  * ``ConstantCapture``   — no large arrays baked in as jaxpr consts
+                            (the PR-1 closed-over-hash-coefficients bug
+                            class: stale AND resident in every program)
+  * ``DeadInput``         — invars threaded but never consumed
+
+Adding a rule: subclass ``Rule`` as a (frozen) dataclass, give it a
+unique ``id``, decorate with ``@register``, and emit findings via
+``self.finding(...)``.  See DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from repro.analysis.program import AuditProgram, label_matches
+from repro.analysis.walker import iter_consts, used_var_ids, walk
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One structured violation: machine-stable ids/paths plus a human
+    message — the JSON report is a list of these."""
+
+    rule: str
+    severity: str
+    program: str
+    where: str  # eqn path, invar label, or "" for program-level findings
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+RULES: dict[str, type] = {}
+
+
+def register(cls):
+    """Add a Rule subclass to the registry (keyed by its stable id)."""
+    if not getattr(cls, "id", None):
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if cls.id in RULES:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    RULES[cls.id] = cls
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """Base: parameters live on the (frozen) dataclass, state does not —
+    a rule instance is reusable across programs."""
+
+    id = ""  # class attribute, overridden per subclass
+    severity = "error"
+
+    def check(self, program: AuditProgram) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, program: AuditProgram, where: str, message: str,
+                *, severity: str | None = None) -> Finding:
+        return Finding(
+            rule=self.id,
+            severity=severity or self.severity,
+            program=program.name,
+            where=where,
+            message=message,
+        )
+
+
+def audit_program(program: AuditProgram, rules) -> list[Finding]:
+    """Run every rule against one captured program."""
+    findings: list[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(program))
+    return findings
+
+
+# --- the shipped rules --------------------------------------------------------
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class LaunchBudget(Rule):
+    """The compiled program issues at most (``exact=False``) or exactly
+    (default) ``budget`` launches of ``primitive`` — the 26 → 3 → 1
+    trajectory, frozen as a gate."""
+
+    budget: int = 1
+    primitive: str = "pallas_call"
+    exact: bool = True
+
+    id = "launch-budget"
+
+    def check(self, program):
+        sites = [s for s in walk(program.closed) if s.primitive == self.primitive]
+        n = len(sites)
+        bad = n != self.budget if self.exact else n > self.budget
+        if not bad:
+            return []
+        rel = "exactly" if self.exact else "at most"
+        where = sites[self.budget].path if n > self.budget else ""
+        return [self.finding(
+            program, where,
+            f"{n} {self.primitive} launches; budget is {rel} {self.budget}",
+        )]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class NoDeviceGatherOf(Rule):
+    """Inputs whose pytree path passes through one of ``names`` (e.g. the
+    CCE ``ptr``/``hs`` buffers) must appear in NO equation: with
+    host-translated rows the device program never touches the pointer
+    tables (DESIGN.md §4).  Vacuous passes are themselves findings — if
+    no input matches, the audit spec is mislabeled."""
+
+    names: tuple[str, ...] = ("ptr", "hs")
+
+    id = "no-device-gather"
+
+    def check(self, program):
+        labeled = program.labeled_invars()
+        if not labeled:
+            return [self.finding(
+                program, "",
+                "inputs could not be labeled (flat invars != arg leaves); "
+                "cannot prove the pointer tables are unread",
+            )]
+        matched = [(lbl, v) for lbl, v in labeled
+                   if label_matches(lbl, self.names)]
+        if not matched:
+            return [self.finding(
+                program, "",
+                f"no input matches {self.names} — vacuously true, check "
+                "the audit spec",
+            )]
+        used = used_var_ids(program.closed, include_outputs=False)
+        return [
+            self.finding(
+                program, lbl,
+                f"input {lbl} (one of {self.names}) is consumed by the "
+                "device program; host translation must keep it unread",
+            )
+            for lbl, v in matched if id(v) in used
+        ]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class DonationCoverage(Rule):
+    """Every donated input leaf must carry an input-output alias in the
+    lowering (``tf.aliasing_output`` is how StableHLO records jit
+    donation).  A donated leaf without an alias means XLA will copy —
+    the in-place TrainState contract silently broke."""
+
+    id = "donation-coverage"
+
+    def check(self, program):
+        if program.n_donated == 0:
+            return [self.finding(
+                program, "",
+                "program donates nothing; DonationCoverage has nothing to "
+                "prove — check the audit spec's donate_argnums",
+            )]
+        n_aliased = program.lowered_text.count("tf.aliasing_output")
+        if n_aliased >= program.n_donated:
+            return []
+        return [self.finding(
+            program, "",
+            f"{program.n_donated} leaves donated but only {n_aliased} "
+            "input-output aliases in the lowering — the rest will be "
+            "copied, not updated in place",
+        )]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class DtypeHygiene(Rule):
+    """No equation output (anywhere, including sub-jaxprs) may carry a
+    forbidden dtype — f64 leaks and silent complex promotions double the
+    hot path's bytes and never belong in this codebase's programs."""
+
+    forbid: tuple[str, ...] = ("float64", "complex64", "complex128")
+
+    id = "dtype-hygiene"
+
+    def check(self, program):
+        findings = []
+        for site in walk(program.closed):
+            for var in site.eqn.outvars:
+                dtype = getattr(getattr(var, "aval", None), "dtype", None)
+                if dtype is not None and str(dtype) in self.forbid:
+                    findings.append(self.finding(
+                        program, site.path,
+                        f"{site.primitive} produces {dtype} "
+                        f"(forbidden: {self.forbid})",
+                    ))
+        return findings
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class NoHostCallback(Rule):
+    """The step must not round-trip through the host: no
+    pure/io/debug callbacks anywhere in the program."""
+
+    primitives: tuple[str, ...] = (
+        "pure_callback", "io_callback", "debug_callback",
+    )
+
+    id = "no-host-callback"
+
+    def check(self, program):
+        return [
+            self.finding(
+                program, site.path,
+                f"host callback primitive {site.primitive} inside the "
+                "program — the step must stay on device",
+            )
+            for site in walk(program.closed)
+            if site.primitive in self.primitives
+        ]
+
+
+def _is_real_transfer(eqn) -> bool:
+    """jax lowers some pure-aliasing internals (scalar promotion paths)
+    to ``device_put`` with no target device and ALIAS copy semantics —
+    XLA elides those.  A REAL transfer names a device/sharding or forces
+    a copy; unknown param shapes fail closed (flagged)."""
+    devices = eqn.params.get("devices", None)
+    semantics = eqn.params.get("copy_semantics", None)
+    if devices is None or semantics is None:
+        return True
+    return any(d is not None for d in devices) or any(
+        "ALIAS" not in str(s) for s in semantics
+    )
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class NoTransfers(Rule):
+    """No explicit transfers inside the traced program (``device_put``
+    to a concrete device/sharding, or one forcing a copy, in a jitted
+    step is a placement XLA cannot fuse away)."""
+
+    primitives: tuple[str, ...] = ("device_put",)
+
+    id = "no-transfers"
+
+    def check(self, program):
+        return [
+            self.finding(
+                program, site.path,
+                f"transfer primitive {site.primitive} with a concrete "
+                "placement or copy inside the program",
+            )
+            for site in walk(program.closed)
+            if site.primitive in self.primitives
+            and (site.primitive != "device_put" or _is_real_transfer(site.eqn))
+        ]
+
+
+def _nbytes(const: Any) -> int:
+    shape = getattr(const, "shape", None)
+    dtype = getattr(const, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(math.prod(shape)) * int(getattr(dtype, "itemsize", 1) or 1)
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class ConstantCapture(Rule):
+    """No large arrays baked into the jaxpr as constants.  A big const is
+    (a) resident in EVERY executable built from the program and (b) the
+    signature of accidentally closing over state the program should take
+    as an argument — the exact bug class PR 1 fixed when the CCE helper
+    hashes were closed over statically and went stale across transitions."""
+
+    max_bytes: int = 1 << 16
+
+    id = "constant-capture"
+
+    def check(self, program):
+        findings = []
+        for path, const in iter_consts(program.closed):
+            nbytes = _nbytes(const)
+            if nbytes > self.max_bytes:
+                shape = getattr(const, "shape", ())
+                dtype = getattr(const, "dtype", "?")
+                findings.append(self.finding(
+                    program, path,
+                    f"captured constant {shape} {dtype} ({nbytes} bytes > "
+                    f"{self.max_bytes}) — pass it as an argument instead",
+                ))
+        return findings
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class DeadInput(Rule):
+    """Inputs threaded through the signature but never consumed.  Dead
+    inputs hide stale plumbing — except the ones that are dead BY
+    CONTRACT (the ptr/hs buffers on the host-translated path), which the
+    audit spec allowlists by name."""
+
+    allow: tuple[str, ...] = ()
+
+    id = "dead-input"
+
+    def check(self, program):
+        labeled = program.labeled_invars()
+        if not labeled:
+            return [self.finding(
+                program, "",
+                "inputs could not be labeled (flat invars != arg leaves); "
+                "cannot attribute dead inputs",
+            )]
+        used = used_var_ids(program.closed, include_outputs=True)
+        return [
+            self.finding(
+                program, lbl,
+                f"input {lbl} is never consumed by the program",
+            )
+            for lbl, var in labeled
+            if id(var) not in used
+            and not (self.allow and label_matches(lbl, self.allow))
+        ]

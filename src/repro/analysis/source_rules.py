@@ -1,0 +1,190 @@
+"""AST-level source rules — repo invariants the type system can't state.
+
+Pure stdlib (``ast``): the CI lint job runs these without installing jax.
+Three rules, each a bug class this repo actually hit:
+
+  * ``fuse-rows-twin`` — every class defining ``fuse_rows`` must define a
+    ``fuse_rows_np`` twin.  Host pointer translation (data/translate.py)
+    is bit-exact ONLY because every table's row function has a numpy
+    mirror; a method without its twin silently breaks the host path for
+    that table type.
+  * ``no-int-cast`` — no ``int(...)``/``float(...)`` wrapped directly
+    around an array reduction, and no ``.item()`` at all.  The PR-4 bug:
+    ``int(counts.sum())`` truncated decayed sub-1 histograms to zero; on
+    traced values the same cast is a concretization error at best.  Only
+    modules that import jax are checked (a pure-numpy module cannot hold
+    a traced value); jax-module host-side uses that are genuinely sound
+    carry an explicit waiver comment: ``# audit: allow-int-cast``.
+  * ``no-raw-experimental`` — ``jax.experimental`` is imported in exactly
+    one place, ``repro/compat.py``.  Everything else imports the shims
+    (``shard_map``, ``pallas``, ...) from there, so jax API graduation is
+    a one-file change.
+
+Waivers are per-line: end the line with ``# audit: allow-<rule>``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterator
+
+SOURCE_RULE_IDS = ("fuse-rows-twin", "no-int-cast", "no-raw-experimental")
+
+_REDUCTIONS = ("sum", "mean", "max", "min", "prod", "dot")
+_COMPAT_BASENAME = "compat.py"
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceFinding:
+    rule: str
+    severity: str
+    path: str
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _waived(lines: list[str], lineno: int, rule: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    return f"audit: allow-{rule}" in lines[lineno - 1]
+
+
+def _check_fuse_rows_twin(path, tree, lines) -> Iterator[SourceFinding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        defined = {
+            n.name for n in node.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        if "fuse_rows" in defined and "fuse_rows_np" not in defined:
+            if _waived(lines, node.lineno, "fuse-rows-twin"):
+                continue
+            yield SourceFinding(
+                "fuse-rows-twin", "error", path, node.lineno,
+                f"class {node.name} defines fuse_rows without a bit-exact "
+                "fuse_rows_np twin — the host translator cannot mirror it",
+            )
+
+
+def _is_reduction_call(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _REDUCTIONS
+    )
+
+
+def _imports_jax(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name.split(".")[0] == "jax" for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.split(".")[0] == "jax":
+                return True
+    return False
+
+
+def _check_int_cast(path, tree, lines) -> Iterator[SourceFinding]:
+    if not _imports_jax(tree):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in ("int", "float")
+            and len(node.args) == 1
+            and _is_reduction_call(node.args[0])
+        ):
+            if _waived(lines, node.lineno, "int-cast"):
+                continue
+            yield SourceFinding(
+                "no-int-cast", "error", path, node.lineno,
+                f"{node.func.id}() wrapped around an array reduction — on "
+                "traced values this concretizes; on decayed float counts "
+                "it truncates (the PR-4 histogram bug).  If the value is "
+                "provably host-side, waive with `# audit: allow-int-cast`",
+            )
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "item"
+            and not node.args
+            and not node.keywords
+        ):
+            if _waived(lines, node.lineno, "int-cast"):
+                continue
+            yield SourceFinding(
+                "no-int-cast", "error", path, node.lineno,
+                ".item() call — concretizes traced values; use jnp ops or "
+                "waive with `# audit: allow-int-cast`",
+            )
+
+
+def _check_raw_experimental(path, tree, lines) -> Iterator[SourceFinding]:
+    if os.path.basename(path) == _COMPAT_BASENAME:
+        return
+    for node in ast.walk(tree):
+        hit = None
+        if isinstance(node, ast.ImportFrom):
+            if node.module and node.module.startswith("jax.experimental"):
+                hit = f"from {node.module} import ..."
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("jax.experimental"):
+                    hit = f"import {alias.name}"
+        elif isinstance(node, ast.Attribute):
+            if (
+                node.attr == "experimental"
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "jax"
+            ):
+                hit = "jax.experimental attribute access"
+        if hit is None or _waived(lines, node.lineno, "raw-experimental"):
+            continue
+        yield SourceFinding(
+            "no-raw-experimental", "error", path, node.lineno,
+            f"{hit} outside compat.py — route the shim through "
+            "repro.compat so jax API drift stays a one-file change",
+        )
+
+
+_CHECKS = (
+    _check_fuse_rows_twin,
+    _check_int_cast,
+    _check_raw_experimental,
+)
+
+
+def check_source_file(path: str) -> list[SourceFinding]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return [SourceFinding(
+            "syntax", "error", path, e.lineno or 0, f"does not parse: {e.msg}"
+        )]
+    lines = text.splitlines()
+    findings: list[SourceFinding] = []
+    for check in _CHECKS:
+        findings.extend(check(path, tree, lines))
+    return findings
+
+
+def run_source_rules(root: str = "src/repro") -> list[SourceFinding]:
+    """Walk ``root`` and check every ``.py`` file.  Deterministic order."""
+    findings: list[SourceFinding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                findings.extend(
+                    check_source_file(os.path.join(dirpath, fname))
+                )
+    return findings

@@ -110,8 +110,8 @@ def _shapes_match(t_leaves, stored) -> bool:
     return len(t_leaves) == len(stored) and not any(
         hasattr(t, "shape")
         and np.size(t) > 0
-        and tuple(t.shape) != tuple(l.shape)
-        for t, l in zip(t_leaves, stored)
+        and tuple(t.shape) != tuple(leaf.shape)
+        for t, leaf in zip(t_leaves, stored)
     )
 
 

@@ -16,6 +16,11 @@ try:  # jax >= 0.4.35 exports it at top level as jax.shard_map
 except AttributeError:  # 0.4.x: experimental home
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
+# pallas has no stable top-level home yet; this is the ONE sanctioned
+# import of it (kernels do `from repro.compat import pallas as pl`, and
+# the no-raw-experimental source rule keeps it that way)
+from jax.experimental import pallas  # noqa: E402,F401
+
 
 @contextlib.contextmanager
 def set_mesh(mesh):

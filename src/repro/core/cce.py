@@ -466,7 +466,9 @@ class CCE:
         sums = jnp.zeros((self.c, self.k, self.dsub), jnp.float32)
         wsums = jnp.zeros_like(sums)
         wcounts = jnp.zeros((self.c, self.k), jnp.float32)
-        seg = lambda vals, idx: jax.ops.segment_sum(vals, idx, num_segments=self.k)
+        def seg(vals, idx):
+            return jax.ops.segment_sum(vals, idx, num_segments=self.k)
+
         for ids in self._id_chunks(chunk_size):
             per_id = self.materialize({"tables": mt}, old_buffers, ids)
             per_id = per_id.astype(jnp.float32)

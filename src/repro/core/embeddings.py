@@ -504,7 +504,9 @@ class DHE:
 
     def lookup(self, params, buffers, ids):
         x = self._features(buffers, ids)
-        mish = lambda v: v * jnp.tanh(jax.nn.softplus(v))
+        def mish(v):
+            return v * jnp.tanh(jax.nn.softplus(v))
+
         x = mish(x @ params["w1"] + params["b1"])
         x = mish(x @ params["w2"] + params["b2"])
         return x @ params["w3"] + params["b3"]

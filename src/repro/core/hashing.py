@@ -102,7 +102,7 @@ def _seed_of(key) -> int:
             data = np.asarray(jax.random.key_data(key))
         except Exception:  # tracer — fixed fallback
             return 0x5EED
-    return int(data.astype(np.uint64).sum())
+    return int(data.astype(np.uint64).sum())  # audit: allow-int-cast (host np)
 
 
 def make_hash(key, m: int) -> MultiplyShiftHash:

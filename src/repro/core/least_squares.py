@@ -25,7 +25,7 @@ Figure-1b scale (n=1e4, d1=1e3, d2=10).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

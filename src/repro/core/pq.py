@@ -55,7 +55,7 @@ def product_quantize(
             a = res.assignments
         codebooks.append(res.centroids)
         assigns.append(a)
-        mse += float(jnp.mean((x - res.centroids[a]) ** 2))
+        mse += float(jnp.mean((x - res.centroids[a]) ** 2))  # audit: allow-int-cast (eager)
     return PQResult(
         codebooks=jnp.stack(codebooks),
         assignments=jnp.stack(assigns),

@@ -38,7 +38,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.compat import pallas as pl
 
 
 DEFAULT_B_BLK = 256

@@ -25,7 +25,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.compat import pallas as pl
 
 DEFAULT_BQ = 512
 DEFAULT_BK = 512
@@ -43,7 +43,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float, causal: bool,
     nk = S // bk
 
     def body(j, carry):
-        acc, m, l = carry
+        acc, m, ell = carry
         k = pl.load(k_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
         v = pl.load(v_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -55,11 +55,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float, causal: bool,
         safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe), 0.0)
         p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe[:, None]), 0.0)
-        l = l * alpha + p.sum(axis=-1)
+        ell = ell * alpha + p.sum(axis=-1)
         acc = acc * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
-        return acc, m_new, l
+        return acc, m_new, ell
 
     acc0 = jnp.zeros((bq, D), jnp.float32)
     m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
@@ -67,8 +67,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float, causal: bool,
     # causal: kv blocks beyond this q block never contribute — bound the loop
     # (program_id is traced: ceil-div in lax arithmetic)
     hi = nk if not causal else jnp.minimum(((qi + 1) * bq + bk - 1) // bk, nk)
-    acc, m, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
-    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    acc, m, ell = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(ell, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention_pallas(

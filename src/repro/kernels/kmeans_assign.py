@@ -19,7 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.compat import pallas as pl
 
 DEFAULT_N_BLK = 256
 DEFAULT_K_BLK = 512

@@ -37,7 +37,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results")
 def n_params_of(state_shape) -> int:
     import numpy as np
 
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(state_shape.params)))
+    return int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(state_shape.params)))
 
 
 def active_params(cfg, total: int) -> int:
@@ -72,7 +72,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered = jitted.lower(*args)
             import numpy as np
 
-            n_total = int(sum(np.prod(l.shape) for l in jax.tree.leaves(args[0])))
+            n_total = int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(args[0])))
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower

@@ -19,9 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
-import numpy as np
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s

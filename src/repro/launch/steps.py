@@ -6,8 +6,6 @@ Everything here is mesh-parametric: pass the 16x16 production mesh, the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

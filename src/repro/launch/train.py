@@ -11,16 +11,13 @@ DLRM (the paper's model): ``--arch dlrm``.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data import clickstream_batches, lm_token_batches, ClickstreamConfig
-from repro.launch.mesh import make_host_mesh, batch_axes as mesh_batch_axes
 from repro.models import dlrm, lm
 from repro.optim import adamw, sgd, cosine_schedule
 from repro.optim.remap import remap_opt_state
@@ -96,7 +93,9 @@ def build_dlrm_trainer(args):
     params, buffers = dlrm.init(key, cfg)
     dyn, static = split_buffers(buffers)
     optimizer = sgd(momentum=0.0)  # the paper's choice
-    lr_fn = lambda step: jnp.float32(args.lr)
+    def lr_fn(step):
+        return jnp.float32(args.lr)
+
 
     def loss_fn(p, b, mb):
         return dlrm.bce_loss(p, b, cfg, mb), {}

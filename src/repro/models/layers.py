@@ -170,8 +170,8 @@ def _sdpa(cfg: ModelConfig, q, k, v, mask, axes=None) -> jax.Array:
         # HBM-traffic term of non-flash attention.
         m = jax.lax.stop_gradient(scores.max(axis=-1, keepdims=True))
         p = jnp.exp(scores - m).astype(jnp.bfloat16)
-        l = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
-        w = (p / l.astype(jnp.bfloat16)).astype(q.dtype)
+        ell = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        w = (p / ell.astype(jnp.bfloat16)).astype(q.dtype)
     else:
         w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
@@ -220,7 +220,7 @@ def _sdpa_chunked(cfg: ModelConfig, q, k, v, axes=None) -> jax.Array:
     qpos = jnp.arange(Sq)
 
     def body(carry, inp):
-        acc, m, l = carry  # (B,H,S,D), (B,H,S), (B,H,S)
+        acc, m, ell = carry  # (B,H,S,D), (B,H,S), (B,H,S)
         j, kj, vj = inp  # chunk idx, (B,H,C,D), (B,H,C,D)
         kpos = j * C + jnp.arange(C)
         s = jnp.einsum("bhqd,bhcd->bhqc", qf, kj)  # (B,H,S,C)
@@ -232,9 +232,9 @@ def _sdpa_chunked(cfg: ModelConfig, q, k, v, axes=None) -> jax.Array:
         safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
         pexp = jnp.where(valid[None, None], jnp.exp(s - safe_m[..., None]), 0.0)
-        l = l * alpha + pexp.sum(axis=-1)
+        ell = ell * alpha + pexp.sum(axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum("bhqc,bhcd->bhqd", pexp, vj)
-        return (acc, m_new, l), None
+        return (acc, m_new, ell), None
 
     acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
     m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
@@ -243,8 +243,8 @@ def _sdpa_chunked(cfg: ModelConfig, q, k, v, axes=None) -> jax.Array:
     # exp-weights — which re-materializes the full S^2 traffic the chunked
     # form exists to avoid
     body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (jnp.arange(nc), kc, vc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (acc, m, ell), _ = jax.lax.scan(body, (acc0, m0, l0), (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(ell, 1e-30)[..., None]
     return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,S,H,D)
 
 

@@ -23,7 +23,6 @@ residual stream.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -215,10 +214,13 @@ def param_specs(cfg: ModelConfig, *, dp: Any = "data", tp: str = "model", ep: st
             "wx": P(None, tp), "wr": P(None, None, None), "b": P(tp),
             "ln_scale": P(None), "up": P(None, tp), "down": P(tp, None),
         }
-        add1 = lambda spec: jax.tree.map(lambda ps: P(None, *ps), spec,
-                                         is_leaf=lambda x: isinstance(x, P))
-        add2 = lambda spec: jax.tree.map(lambda ps: P(None, None, *ps), spec,
-                                         is_leaf=lambda x: isinstance(x, P))
+        def add1(spec):
+            return jax.tree.map(lambda ps: P(None, *ps), spec,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        def add2(spec):
+            return jax.tree.map(lambda ps: P(None, None, *ps), spec,
+                                is_leaf=lambda x: isinstance(x, P))
         if cfg.slstm_every:
             specs["blocks"] = {
                 "mlstm": add2(m), "slstm": add1(s),
@@ -362,7 +364,6 @@ def forward(params, buffers, cfg: ModelConfig, batch, *, batch_axes=("data",)):
     """
     tokens = batch["tokens"]
     x = embed(params, buffers, cfg, tokens)
-    dp = P(batch_axes)
     B, S = x.shape[0], x.shape[1]
     if cfg.family == "vlm" and "patch_emb" in batch:
         pe = batch["patch_emb"].astype(cfg.dtype) @ params["patch_proj"].astype(cfg.dtype)

@@ -145,7 +145,6 @@ def mlstm_train(p, cfg: ModelConfig, x_in, *, chunk: int = MLSTM_CHUNK):
 
 def mlstm_decode(p, cfg: ModelConfig, x_in, state):
     """One-token recurrent mLSTM step.  state = (C (B,H,hd,hd), n, m)."""
-    B = x_in.shape[0]
     q, k, v, ig, fg, z = _mlstm_qkvgates(p, cfg, x_in)  # S=1
     C, n, m = state
     q1, k1, v1 = q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)

@@ -10,8 +10,7 @@ moments only read once per step this is the standard ZeRO-1 trade).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

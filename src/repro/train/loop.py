@@ -57,9 +57,9 @@ def split_buffers(buffers: Pytree):
     to close over."""
     leaves, treedef = jax.tree.flatten(buffers)
     dynamic = jax.tree.unflatten(
-        treedef, [l if _is_arr(l) else None for l in leaves]
+        treedef, [leaf if _is_arr(leaf) else None for leaf in leaves]
     )
-    static = (treedef, tuple((i, l) for i, l in enumerate(leaves) if not _is_arr(l)))
+    static = (treedef, tuple((i, leaf) for i, leaf in enumerate(leaves) if not _is_arr(leaf)))
     return dynamic, static
 
 

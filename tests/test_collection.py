@@ -39,28 +39,6 @@ MIXED = DLRMConfig(
 )
 
 
-def count_pallas_calls(jaxpr) -> int:
-    """Recursively count pallas_call eqns (the heavy lookup launches)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                n += count_pallas_calls(sub)
-    return n
-
-
-def _sub_jaxprs(v):
-    if hasattr(v, "eqns"):
-        yield v
-    elif hasattr(v, "jaxpr"):
-        yield v.jaxpr
-    elif isinstance(v, (list, tuple)):
-        for x in v:
-            yield from _sub_jaxprs(x)
-
-
 def _batch(cfg, B=9, seed=0):
     rng = np.random.default_rng(seed)
     return {
@@ -408,10 +386,12 @@ def test_jaxpr_launch_count_matches_n_lookup_launches():
     params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
     sparse = _batch(cfg, B=16)["sparse"]
 
+    from repro.analysis import count_primitive
+
     fwd = jax.make_jaxpr(
         lambda p: coll.lookup_all(p, buffers["emb"], sparse, use_kernel=True)
     )(params["emb"])
-    assert count_pallas_calls(fwd.jaxpr) == coll.n_lookup_launches == 1
+    assert count_primitive(fwd, "pallas_call") == coll.n_lookup_launches == 1
 
     grad = jax.make_jaxpr(
         jax.grad(
@@ -420,7 +400,7 @@ def test_jaxpr_launch_count_matches_n_lookup_launches():
             )
         )
     )(params["emb"])
-    assert count_pallas_calls(grad.jaxpr) == 2  # fwd + bwd, nothing else
+    assert count_primitive(grad, "pallas_call") == 2  # fwd + bwd, nothing else
 
     # whole-model check: the full DLRM loss step still lowers to exactly
     # one forward launch
@@ -429,7 +409,7 @@ def test_jaxpr_launch_count_matches_n_lookup_launches():
     loss_jaxpr = jax.make_jaxpr(
         lambda p: dlrm.bce_loss(p, buffers, cfg_k, batch)
     )(params)
-    assert count_pallas_calls(loss_jaxpr.jaxpr) == 1
+    assert count_primitive(loss_jaxpr, "pallas_call") == 1
 
 
 # --- host-side pointer translation (DESIGN.md §4/§6) -----------------------
@@ -512,8 +492,11 @@ def test_host_translation_tracks_transitions():
 
 def test_rows_path_never_reads_pointer_buffers():
     """DESIGN.md §4's pod contract: with host-translated rows the device
-    program must not consume the (c, d1) pointer tables — asserted on the
-    jaxpr (the ptr input variables appear in no equation)."""
+    program must not consume the (c, d1) pointer tables — asserted by the
+    NoDeviceGatherOf audit rule (ptr/hs invars appear in no equation; the
+    rule also refuses vacuously if no input matches the names)."""
+    from repro.analysis import AuditProgram, NoDeviceGatherOf
+
     cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
     coll = cfg.collection
     params, buffers = dlrm.init(jax.random.PRNGKey(7), cfg)
@@ -526,29 +509,11 @@ def test_rows_path_never_reads_pointer_buffers():
     ).astype(np.int32)
     rows = jnp.asarray(tr.rows(sparse))
 
-    closed = jax.make_jaxpr(
-        lambda p, b, r: coll.lookup_all(p, b, None, use_kernel=True, rows=r)
-    )(params["emb"], buffers["emb"], rows)
-    flat, _ = jax.tree.flatten((params["emb"], buffers["emb"], rows))
-    ptr_positions = [
-        i for i, leaf in enumerate(flat)
-        if hasattr(leaf, "shape") and leaf.ndim == 2
-        and leaf.dtype == jnp.int32 and leaf.shape[1] in cfg.vocab_sizes
-    ]
-    assert ptr_positions  # the ptr tables ARE among the inputs
-
-    used = set()
-
-    def mark(jaxpr):
-        for eqn in jaxpr.eqns:
-            used.update(map(id, eqn.invars))
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    mark(sub)
-
-    mark(closed.jaxpr)
-    for pos in ptr_positions:
-        assert id(closed.jaxpr.invars[pos]) not in used
+    prog = AuditProgram.capture(
+        lambda p, b, r: coll.lookup_all(p, b, None, use_kernel=True, rows=r),
+        params["emb"], buffers["emb"], rows, name="rows_lookup",
+    )
+    assert NoDeviceGatherOf(("ptr", "hs")).check(prog) == []
 
 
 def test_drop_sparse_rejected_when_tables_are_not_all_fused():

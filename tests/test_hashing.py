@@ -1,7 +1,6 @@
 """Universal hashing: correctness, numpy/jnp equivalence, distribution."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hashing

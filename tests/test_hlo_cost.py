@@ -1,7 +1,6 @@
 """The trip-count-aware HLO cost parser (the dry-run's measurement tool)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_cost
 

@@ -3,7 +3,6 @@ claim (CCE > CE > hashing at equal budget on clusterable data)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import dlrm_criteo
 from repro.core.pq import pq_lookup, pq_table, product_quantize

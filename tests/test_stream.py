@@ -242,7 +242,7 @@ def test_tracker_memory_independent_of_vocab():
     )
     assert big.nbytes == 2 * per_feature
     # no state leaf scales with the vocabulary either
-    assert all(l.size < 10_000_000 // 100 for l in big.state_tree())
+    assert all(leaf.size < 10_000_000 // 100 for leaf in big.state_tree())
     # ...and the full-Criteo factory config stays a few dozen MB
     tr = dlrm.make_id_tracker(dlrm_criteo.CONFIG, dlrm_criteo.STREAM)
     assert tr.nbytes < 64e6 < sum(dlrm_criteo.CONFIG.vocab_sizes) * 8
@@ -266,10 +266,12 @@ def test_tracker_state_roundtrip_and_windows():
 
 
 def test_async_fold_matches_sync_statistics():
-    mk = lambda af: SketchFrequencyTracker(
-        (500, 9000), StreamConfig(width=1 << 10, depth=4, heavy=32,
-                                  ring=512, async_fold=af), tracked=(0, 1),
-    )
+    def mk(af):
+        return SketchFrequencyTracker(
+            (500, 9000), StreamConfig(width=1 << 10, depth=4, heavy=32,
+                                      ring=512, async_fold=af), tracked=(0, 1),
+        )
+
     sync, async_ = mk(False), mk(True)
     rng = np.random.default_rng(4)
     for _ in range(10):
@@ -528,7 +530,7 @@ def test_sketch_checkpoint_roundtrip_via_trainer(tmp_path):
                  ckpt_dir=str(tmp_path), ckpt_every=4, id_tracker=tracker)
     tr.run(4)
     tr.ckpt.wait()
-    want = [np.asarray(l) for l in tracker.state_tree()]
+    want = [np.asarray(leaf) for leaf in tracker.state_tree()]
 
     cfg2, step2, state2, static2, _ = _setup(seed=3)
     tracker2 = dlrm.make_id_tracker(cfg2, dlrm_criteo.reduced_stream(window=2))
