@@ -7,6 +7,10 @@ Public surface:
                copies)
   * program  — ``AuditProgram.capture`` (abstract capture + input labels)
   * rules    — the registry (``RULES``) and shipped rule dataclasses
+  * cost_rules — ``CostProfile``/``cost_profile`` + quantitative budget
+               rules over AOT-compiled modules
+  * budget   — committed budget files (``BudgetFile``) and the
+               current-vs-committed diff (``diff_profiles``)
   * audit    — per-entry-point specs, ``run_audit``, the JSON ``Report``
   * source_rules — stdlib-only AST rules (usable without jax)
 
@@ -42,10 +46,24 @@ _EXPORTS = {
     "NoTransfers": "repro.analysis.rules",
     "ConstantCapture": "repro.analysis.rules",
     "DeadInput": "repro.analysis.rules",
+    # cost rules (AOT-compiled quantitative budgets)
+    "CostProfile": "repro.analysis.cost_rules",
+    "cost_profile": "repro.analysis.cost_rules",
+    "FlopBudget": "repro.analysis.cost_rules",
+    "BytesBudget": "repro.analysis.cost_rules",
+    "PeakMemoryBudget": "repro.analysis.cost_rules",
+    "CollectiveBudget": "repro.analysis.cost_rules",
+    "NoReplicatedParam": "repro.analysis.cost_rules",
+    # budget files + diff
+    "BudgetFile": "repro.analysis.budget",
+    "MetricDiff": "repro.analysis.budget",
+    "diff_profiles": "repro.analysis.budget",
+    "diff_summary": "repro.analysis.budget",
     # audit
     "AuditSpec": "repro.analysis.audit",
     "AUDIT_CONFIGS": "repro.analysis.audit",
     "dlrm_audits": "repro.analysis.audit",
+    "dlrm_sharded_audits": "repro.analysis.audit",
     "run_audit": "repro.analysis.audit",
     "Report": "repro.analysis.audit",
     # source rules (jax-free)

@@ -7,6 +7,13 @@ Two layers, selectable independently:
   * AST source rules (always on unless ``--jaxpr-only``): stdlib-only,
     so ``--source-only`` works in an environment without jax — that is
     what the lint CI job runs.
+  * cost budgets (``--budgets [PATH]``): AOT-compile each entry point
+    abstractly, compute its ``CostProfile``, and gate it against the
+    committed budget file (default ``budgets/<config>.json``).  Exits
+    non-zero on any metric regression; ``--cost-report PATH`` writes the
+    full current-vs-committed diff (CI uploads it as
+    ``COST_report.json``); ``--update-budgets`` regenerates the file and
+    prints the old→new diff for review (DESIGN.md §8).
 
 Exit status 1 iff any error-severity finding; ``--json PATH`` writes the
 structured report (CI uploads it as ``AUDIT_report.json``).
@@ -35,6 +42,15 @@ def _parser() -> argparse.ArgumentParser:
                    help="directory the source rules walk")
     p.add_argument("--list-rules", action="store_true",
                    help="print registered rule ids and exit")
+    p.add_argument("--budgets", metavar="PATH", nargs="?", const="auto",
+                   default=None,
+                   help="gate cost profiles against a committed budget file "
+                        "(default path: budgets/<config>.json)")
+    p.add_argument("--update-budgets", action="store_true",
+                   help="regenerate the budget file from current profiles "
+                        "and print the diff (implies --budgets)")
+    p.add_argument("--cost-report", metavar="PATH", default=None,
+                   help="write the current-vs-committed metric diff here")
     return p
 
 
@@ -42,6 +58,7 @@ def main(argv=None) -> int:
     args = _parser().parse_args(argv)
 
     if args.list_rules:
+        import repro.analysis.cost_rules  # noqa: F401 — registers cost rules
         from repro.analysis.rules import RULES
         from repro.analysis.source_rules import SOURCE_RULE_IDS
 
@@ -66,9 +83,38 @@ def main(argv=None) -> int:
                   file=sys.stderr)
 
     if not args.source_only:
+        import os
+
         from repro.analysis.audit import run_audit  # imports jax
 
-        report = run_audit(args.config)
+        want_cost = args.budgets is not None or args.update_budgets
+        budget = None
+        budget_path = None
+        if want_cost:
+            from repro.analysis.budget import (
+                BudgetFile,
+                diff_profiles,
+                diff_summary,
+            )
+
+            budget_path = (
+                args.budgets if args.budgets not in (None, "auto")
+                else os.path.join("budgets", f"{args.config}.json")
+            )
+            if os.path.exists(budget_path):
+                budget = BudgetFile.load(budget_path)
+            elif not args.update_budgets:
+                print(
+                    f"no budget file at {budget_path}; run --update-budgets "
+                    "to create it", file=sys.stderr,
+                )
+                return 2
+
+        # when regenerating, the old budget is a diff baseline, not a gate
+        report = run_audit(
+            args.config, with_cost=want_cost,
+            budget=None if args.update_budgets else budget,
+        )
         report_dict.update(report.to_dict())
         for f in report.findings:
             if f.severity == "error":
@@ -76,6 +122,39 @@ def main(argv=None) -> int:
             where = f" at {f.where}" if f.where else ""
             print(f"[{f.rule}] {f.program}{where}: {f.message}",
                   file=sys.stderr)
+
+        if want_cost:
+            diffs = (
+                diff_profiles(budget, report.profiles) if budget is not None
+                else []
+            )
+            if args.cost_report:
+                payload = {
+                    "config": args.config,
+                    "budget_file": budget_path,
+                    "updated": bool(args.update_budgets),
+                    "diffs": [d.to_dict() for d in diffs],
+                    "profiles": {
+                        k: p.to_dict() for k, p in report.profiles.items()
+                    },
+                }
+                with open(args.cost_report, "w", encoding="utf-8") as fh:
+                    json.dump(payload, fh, indent=2)
+                    fh.write("\n")
+            if args.update_budgets:
+                os.makedirs(os.path.dirname(budget_path) or ".", exist_ok=True)
+                new = BudgetFile.from_profiles(
+                    args.config, report.profiles,
+                    tolerances=budget.tolerances if budget else None,
+                )
+                new.save(budget_path)
+                print(f"budget file written: {budget_path}", file=sys.stderr)
+                if diffs:
+                    print("diff vs previous:\n" + diff_summary(diffs),
+                          file=sys.stderr)
+            elif budget is not None:
+                print("budget diff vs committed:\n" + diff_summary(diffs),
+                      file=sys.stderr)
 
     report_dict["ok"] = n_errors == 0
     text = json.dumps(report_dict, indent=2)

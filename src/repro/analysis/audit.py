@@ -22,6 +22,21 @@ The ``dlrm_criteo`` bundle audits the four canonical programs:
                        and ZERO reads of the ptr/hs pointer tables
                        (DESIGN.md §4's pod contract).
 
+The ``*_sharded`` bundles audit the distributed CCE transition
+(``cluster_sharded`` / ``assign_all_sharded`` over a mesh spanning every
+visible device): zero pallas launches, clean dtypes, and a
+``CollectiveBudget`` naming exactly which collective kinds the psum-based
+k-means and the sharded full-vocab assignment may emit.
+``NoReplicatedParam`` rides at WARNING severity — the (c, d1) pointer
+table is deliberately replicated until ROADMAP item 1 shards the
+supertable, and the warning documents that debt on every run without
+failing the gate.
+
+Cost rules (``spec.cost_rules``) are separate from structural rules:
+they AOT-compile the entry point (seconds per program instead of
+milliseconds), so ``run_audit`` only runs them — and only then computes
+``CostProfile``s — when asked (``with_cost=True`` / ``--budgets``).
+
 ROADMAP items 1–3 (sharded supertable, serve engine, quantized slabs)
 should land by ADDING specs here — their invariants become checkable
 before the systems are built.
@@ -30,8 +45,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Callable
 
+from repro.analysis.cost_rules import CollectiveBudget, NoReplicatedParam, cost_profile
 from repro.analysis.program import AuditProgram
 from repro.analysis.rules import (
     ConstantCapture,
@@ -64,11 +81,16 @@ _HYGIENE: tuple[Rule, ...] = (
 @dataclasses.dataclass(frozen=True)
 class AuditSpec:
     """One entry point: a thunk building the captured program (lazy —
-    building traces/loads jax) plus the rules that must hold on it."""
+    building traces/loads jax) plus the rules that must hold on it.
+
+    ``rules`` run on every audit (jaxpr/lowering only — cheap);
+    ``cost_rules`` additionally AOT-compile the program and only run
+    under ``run_audit(..., with_cost=True)``."""
 
     name: str
     build: Callable[[], AuditProgram]
     rules: tuple[Rule, ...]
+    cost_rules: tuple[Rule, ...] = ()
 
 
 def _abstract_dlrm(cfg):
@@ -170,16 +192,21 @@ def _build_serve_lookup(cfg, batch_size):
 
 def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
     """The canonical DLRM audit bundle for any DLRMConfig."""
+    # the 1-device contract is ZERO collectives in every compiled module —
+    # the default CollectiveBudget allows nothing
+    no_collectives = (CollectiveBudget(),)
     return (
         AuditSpec(
             "fwd",
             lambda: _build_fwd(cfg, batch_size),
             (LaunchBudget(1), DeadInput(allow=_EPOCH_ALLOW), *_HYGIENE),
+            cost_rules=no_collectives,
         ),
         AuditSpec(
             "grad",
             lambda: _build_grad(cfg, batch_size),
             (LaunchBudget(2), *_HYGIENE),
+            cost_rules=no_collectives,
         ),
         AuditSpec(
             "train_step",
@@ -190,6 +217,7 @@ def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
                 DeadInput(allow=_EPOCH_ALLOW),
                 *_HYGIENE,
             ),
+            cost_rules=no_collectives,
         ),
         AuditSpec(
             "serve_lookup",
@@ -200,6 +228,133 @@ def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
                 DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
                 *_HYGIENE,
             ),
+            cost_rules=no_collectives,
+        ),
+    )
+
+
+# --- the sharded CCE-transition bundle ----------------------------------
+
+
+def _largest_cce(cfg):
+    """The config's largest CCE table — the one whose transition cost
+    dominates (the full-vocab assignment is O(d1))."""
+    from repro.core.cce import CCE
+
+    tables = [
+        t for t in (cfg.table(i) for i in range(cfg.n_sparse))
+        if isinstance(t, CCE)
+    ]
+    if not tables:
+        raise SystemExit(
+            "sharded audit config needs at least one CCE table; "
+            f"emb_method={cfg.emb_method!r}"
+        )
+    return max(tables, key=lambda t: t.d1)
+
+
+def _abstract_cce_state(table):
+    """(params, buffers) ShapeDtypeStructs for one CCE table, built by
+    hand: ``init_buffers`` does real numpy work that is O(d1) (~0.5 GB at
+    Criteo scale), and the audit must stay allocation-free."""
+    import jax
+    import jax.numpy as jnp
+
+    params = {
+        "tables": jax.ShapeDtypeStruct(
+            (table.c, 2, table.k, table.dsub), table.dtype
+        ),
+    }
+    buffers = {
+        "ptr": jax.ShapeDtypeStruct((table.c, table.d1), jnp.int32),
+        "hs": jax.ShapeDtypeStruct((table.c, 2), jnp.uint32),
+        "epoch": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return params, buffers
+
+
+def _data_mesh():
+    """1-axis mesh over every visible device (the multi-device CI lane
+    forces 4 host devices via XLA_FLAGS)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+def _build_cluster_sharded(cfg):
+    import jax
+    import jax.numpy as jnp
+
+    table = _largest_cce(cfg)
+    mesh = _data_mesh()
+    params, buffers = _abstract_cce_state(table)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    chunk = cfg.emb_cluster_chunk or None
+    return AuditProgram.capture(
+        lambda k, p, b: table.cluster_sharded(
+            k, p, b, mesh, chunk_size=chunk, use_kernel=False
+        ),
+        key, params, buffers, name="cluster_sharded",
+    )
+
+
+def _build_assign_all_sharded(cfg):
+    import jax
+    import jax.numpy as jnp
+
+    table = _largest_cce(cfg)
+    mesh = _data_mesh()
+    params, buffers = _abstract_cce_state(table)
+    centroids = jax.ShapeDtypeStruct(
+        (table.c, table.k, table.dsub), jnp.float32
+    )
+    chunk = cfg.emb_cluster_chunk or None
+    return AuditProgram.capture(
+        lambda p, b, cen: table.assign_all_sharded(
+            p, b, cen, mesh, chunk_size=chunk, use_kernel=False
+        ),
+        params, buffers, centroids, name="assign_all_sharded",
+    )
+
+
+def dlrm_sharded_audits(cfg):
+    """Audit bundle for the distributed CCE transition entry points.
+
+    The byte caps here are deliberately loose (the committed budget file
+    supplies the tight, config-specific numbers); what the spec-level
+    ``CollectiveBudget`` pins is the *kinds*: the psum-based distributed
+    k-means and the lazily-gathered sharded pointer may emit all-reduce
+    and all-gather, nothing else, and nothing over DCN.
+    ``NoReplicatedParam`` runs at warning severity: the (c, d1) pointer
+    table IS replicated today (ROADMAP item 1), and the warning keeps
+    that debt visible on every audit without failing CI."""
+    # all-reduce: the psum'd k-means moments; all-gather: the sharded
+    # pointer gathered where consumed; collective-permute: XLA's lowering
+    # of halo/reshard moves inside the same patterns
+    transition_collectives = CollectiveBudget(
+        allow=("all-reduce", "all-gather", "collective-permute"),
+        max_ici_bytes=math.inf,
+        max_dcn_bytes=0.0,
+    )
+    replication_debt = NoReplicatedParam(severity="warning")
+    return (
+        AuditSpec(
+            "cluster_sharded",
+            lambda: _build_cluster_sharded(cfg),
+            (LaunchBudget(0), DeadInput(allow=_EPOCH_ALLOW), *_HYGIENE),
+            cost_rules=(transition_collectives, replication_debt),
+        ),
+        AuditSpec(
+            "assign_all_sharded",
+            lambda: _build_assign_all_sharded(cfg),
+            (
+                LaunchBudget(0),
+                DeadInput(allow=_EPOCH_ALLOW),
+                *_HYGIENE,
+            ),
+            cost_rules=(transition_collectives, replication_debt),
         ),
     )
 
@@ -219,54 +374,91 @@ def _dlrm_criteo_reduced_specs():
     )
 
 
+def _dlrm_criteo_sharded_specs():
+    from repro.configs import dlrm_criteo
+
+    return dlrm_sharded_audits(dlrm_criteo.CONFIG)
+
+
+def _dlrm_criteo_reduced_sharded_specs():
+    from repro.configs import dlrm_criteo
+
+    return dlrm_sharded_audits(dlrm_criteo.reduced(emb_method="cce", cap=512))
+
+
 # config name -> thunk returning the spec tuple (thunks: importing a
 # config loads jax; the CLI must stay importable without it)
 AUDIT_CONFIGS: dict[str, Callable[[], tuple[AuditSpec, ...]]] = {
     "dlrm_criteo": _dlrm_criteo_specs,
     "dlrm_criteo_reduced": _dlrm_criteo_reduced_specs,
+    "dlrm_criteo_sharded": _dlrm_criteo_sharded_specs,
+    "dlrm_criteo_reduced_sharded": _dlrm_criteo_reduced_sharded_specs,
 }
 
 
 @dataclasses.dataclass
 class Report:
-    """One audit run: per-program rule coverage + structured findings."""
+    """One audit run: per-program rule coverage + structured findings
+    (+ per-program ``CostProfile``s when the run captured cost)."""
 
     config: str
     programs: list[dict]
     findings: list[Finding]
+    profiles: dict = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
         return not any(f.severity == "error" for f in self.findings)
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "config": self.config,
             "ok": self.ok,
             "programs": self.programs,
             "findings": [f.to_dict() for f in self.findings],
         }
+        if self.profiles:
+            d["cost"] = {
+                name: prof.to_dict() for name, prof in self.profiles.items()
+            }
+        return d
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), indent=2, **kw)
 
 
-def run_audit(config: str) -> Report:
-    """Build + audit every entry point of a named config."""
+def run_audit(config: str, *, with_cost: bool = False, budget=None) -> Report:
+    """Build + audit every entry point of a named config.
+
+    ``with_cost=True`` additionally AOT-compiles each entry point, runs
+    its ``cost_rules``, and fills ``Report.profiles``.  ``budget`` (a
+    ``budget.BudgetFile``) layers the committed budget's rules on top:
+    per-metric caps at committed*(1+tol), plus structural findings for
+    missing/stale entries and partition-count mismatches.
+    """
     try:
         specs = AUDIT_CONFIGS[config]()
     except KeyError:
         raise SystemExit(
             f"unknown audit config {config!r}; have {sorted(AUDIT_CONFIGS)}"
         ) from None
-    programs, findings = [], []
+    programs, findings, profiles = [], [], {}
     for spec in specs:
         prog = spec.build()
-        found = audit_program(prog, spec.rules)
+        rules = spec.rules
+        if with_cost:
+            rules = rules + spec.cost_rules
+            if budget is not None and (
+                budget_rules := budget.rules_for(spec.name)
+            ):
+                rules = rules + budget_rules
+        found = audit_program(prog, rules)
         findings.extend(found)
+        if with_cost:
+            profiles[spec.name] = cost_profile(prog)
         programs.append({
             "name": spec.name,
-            "rules": [r.id for r in spec.rules],
+            "rules": [r.id for r in rules],
             "n_findings": len(found),
             "n_eqns_by_primitive": {
                 k: v for k, v in sorted(
@@ -274,4 +466,8 @@ def run_audit(config: str) -> Report:
                 ) if k in ("pallas_call", "scan", "while", "cond", "pjit")
             },
         })
-    return Report(config=config, programs=programs, findings=findings)
+    if with_cost and budget is not None:
+        findings.extend(budget.structural_findings(profiles))
+    return Report(
+        config=config, programs=programs, findings=findings, profiles=profiles
+    )

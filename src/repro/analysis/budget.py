@@ -1,0 +1,259 @@
+"""Committed per-config cost budgets and the regression diff.
+
+A budget file (``budgets/<config>.json``) freezes one ``CostProfile``
+per audited entry point plus a per-metric relative tolerance.  The CLI
+(``python -m repro.analysis --config C --budgets budgets/C.json``)
+recomputes the profiles abstractly, instantiates the cost rules from the
+committed numbers (``rules_for``), and fails the build on any metric
+exceeding ``committed * (1 + tol)`` — quantitative drift becomes a red X
+exactly like a planted ptr-gather does.
+
+Semantics:
+
+  * regression  — current > committed * (1 + tol) (+ a small absolute
+    slack so near-zero baselines don't flag on noise; ici/dcn get NO
+    slack: zero collectives must stay zero).  Error finding, exit 1.
+  * improvement — current < committed * (1 - tol).  Warning in the diff
+    report only: run ``--update-budgets`` to ratchet the budget down so
+    the win is locked in.
+  * structural  — entry point missing from the budget file, a committed
+    entry whose program vanished, or a partition-count mismatch (numbers
+    compiled for different SPMD meshes are not comparable).  Error.
+
+``--update-budgets`` regenerates the file and prints the old→new diff
+for review; the intentional-regression workflow is DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.analysis.cost_rules import (
+    METRICS,
+    BytesBudget,
+    CollectiveBudget,
+    CostProfile,
+    FlopBudget,
+    PeakMemoryBudget,
+)
+from repro.analysis.rules import Finding, Rule
+
+FORMAT_VERSION = 1
+
+DEFAULT_TOLERANCES = {
+    "flops": 0.10,
+    "hbm_bytes": 0.25,
+    "peak_bytes": 0.25,
+    "ici_bytes": 0.25,
+    "dcn_bytes": 0.25,
+}
+
+# absolute slack: a 1 MFLOP / 64 KiB wobble on a near-zero baseline is
+# compiler noise, not a regression; collective bytes get NONE — the
+# 1-device step's zero must stay an exact zero
+_ABS_SLACK = {
+    "flops": 1e6,
+    "hbm_bytes": float(1 << 16),
+    "peak_bytes": float(1 << 16),
+    "ici_bytes": 0.0,
+    "dcn_bytes": 0.0,
+}
+
+
+def allowed_max(committed: float, metric: str, tolerances: dict) -> float:
+    tol = float(tolerances.get(metric, 0.0))
+    return max(committed * (1.0 + tol), committed + _ABS_SLACK[metric])
+
+
+def _structural(program: str, message: str) -> Finding:
+    return Finding(
+        rule="budget-file", severity="error", program=program,
+        where="", message=message,
+    )
+
+
+@dataclasses.dataclass
+class BudgetFile:
+    """One committed budget: per-program metric values + tolerances."""
+
+    config: str
+    programs: dict[str, dict]
+    tolerances: dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_TOLERANCES)
+    )
+
+    @classmethod
+    def from_profiles(
+        cls,
+        config: str,
+        profiles: dict[str, CostProfile],
+        tolerances: dict[str, float] | None = None,
+    ) -> "BudgetFile":
+        return cls(
+            config=config,
+            programs={name: prof.to_dict() for name, prof in profiles.items()},
+            tolerances=dict(tolerances or DEFAULT_TOLERANCES),
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "format_version": FORMAT_VERSION,
+            "config": self.config,
+            "command": (
+                f"python -m repro.analysis --config {self.config} "
+                "--update-budgets"
+            ),
+            "tolerances": self.tolerances,
+            "programs": self.programs,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BudgetFile":
+        return cls(
+            config=d["config"],
+            programs=d["programs"],
+            tolerances=d.get("tolerances", dict(DEFAULT_TOLERANCES)),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "BudgetFile":
+        with open(path, encoding="utf-8") as fh:
+            return cls.from_dict(json.load(fh))
+
+    def save(self, path: str) -> None:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.to_dict(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    # --- the gate --------------------------------------------------------
+
+    def rules_for(self, name: str) -> tuple[Rule, ...] | None:
+        """The cost-rule instances encoding this budget for one entry
+        point (None when the program has no committed entry)."""
+        entry = self.programs.get(name)
+        if entry is None:
+            return None
+        t = self.tolerances
+        coll = entry.get("collectives", {})
+        return (
+            FlopBudget(
+                max_flops=allowed_max(entry["flops"], "flops", t),
+                baseline=entry["flops"],
+            ),
+            BytesBudget(
+                max_bytes=allowed_max(entry["hbm_bytes"], "hbm_bytes", t),
+                baseline=entry["hbm_bytes"],
+            ),
+            PeakMemoryBudget(
+                max_bytes=allowed_max(entry["peak_bytes"], "peak_bytes", t),
+                baseline=entry["peak_bytes"],
+            ),
+            CollectiveBudget(
+                allow=tuple(sorted(k for k, v in coll.items() if v > 0)),
+                max_ici_bytes=allowed_max(entry["ici_bytes"], "ici_bytes", t),
+                max_dcn_bytes=allowed_max(entry["dcn_bytes"], "dcn_bytes", t),
+            ),
+        )
+
+    def structural_findings(
+        self, profiles: dict[str, CostProfile]
+    ) -> list[Finding]:
+        """Coverage + comparability: every audited program budgeted, every
+        budgeted program still audited, partition counts equal."""
+        findings = []
+        for name, prof in profiles.items():
+            entry = self.programs.get(name)
+            if entry is None:
+                findings.append(_structural(
+                    name,
+                    f"entry point {name!r} has no committed budget — run "
+                    "--update-budgets and review the diff",
+                ))
+                continue
+            committed_parts = int(entry.get("num_partitions", 1))
+            if committed_parts != prof.num_partitions:
+                findings.append(_structural(
+                    name,
+                    f"budget was committed at num_partitions="
+                    f"{committed_parts} but the module compiled for "
+                    f"{prof.num_partitions} — run the matching lane or "
+                    "regenerate the budget",
+                ))
+        for name in sorted(set(self.programs) - set(profiles)):
+            findings.append(_structural(
+                name,
+                f"committed budget entry {name!r} matches no audited entry "
+                "point — stale budget file, run --update-budgets",
+            ))
+        return findings
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricDiff:
+    """One (program, metric) row of the budget diff report."""
+
+    program: str
+    metric: str
+    committed: float
+    current: float
+    status: str  # ok | regression | improvement
+
+    @property
+    def rel_change(self) -> float:
+        if self.committed == 0:
+            return 0.0 if self.current == 0 else float("inf")
+        return self.current / self.committed - 1.0
+
+    def to_dict(self) -> dict:
+        return {
+            "program": self.program,
+            "metric": self.metric,
+            "committed": self.committed,
+            "current": self.current,
+            "rel_change": self.rel_change,
+            "status": self.status,
+        }
+
+
+def diff_profiles(
+    budget: BudgetFile, profiles: dict[str, CostProfile]
+) -> list[MetricDiff]:
+    """Full current-vs-committed diff, every metric of every program —
+    the COST_report.json payload.  Informational: pass/fail comes from
+    the rules ``rules_for`` builds, which share ``allowed_max``."""
+    diffs = []
+    for name in sorted(profiles):
+        entry = budget.programs.get(name)
+        if entry is None:
+            continue
+        prof = profiles[name]
+        for metric in METRICS:
+            committed = float(entry[metric])
+            current = prof.metric(metric)
+            if current > allowed_max(committed, metric, budget.tolerances):
+                status = "regression"
+            elif current < committed * (
+                1.0 - budget.tolerances.get(metric, 0.0)
+            ):
+                status = "improvement"
+            else:
+                status = "ok"
+            diffs.append(MetricDiff(
+                program=name, metric=metric,
+                committed=committed, current=current, status=status,
+            ))
+    return diffs
+
+
+def diff_summary(diffs: list[MetricDiff], *, changed_only: bool = True) -> str:
+    """Human-readable diff table (printed by --budgets/--update-budgets)."""
+    lines = []
+    for d in diffs:
+        if changed_only and d.status == "ok":
+            continue
+        rel = "inf" if d.rel_change == float("inf") else f"{d.rel_change:+.1%}"
+        lines.append(
+            f"  {d.program}.{d.metric}: {d.committed:,.0f} -> "
+            f"{d.current:,.0f} ({rel}) [{d.status}]"
+        )
+    return "\n".join(lines) if lines else "  (all metrics within tolerance)"

@@ -1,0 +1,301 @@
+"""Quantitative cost rules over AOT-compiled entry points.
+
+PR 6's rules pin program *structure* (launch counts, donation, dtype
+hygiene); these pin program *cost*.  ``cost_profile(program)`` AOT-
+compiles the captured entry point abstractly (``AuditProgram.compiled_
+text`` — ShapeDtypeStructs in, optimized per-device HLO out, zero
+allocation) and feeds the text through the trip-count-aware walker in
+``launch/hlo_cost.py``, producing one ``CostProfile`` per entry point:
+
+  * ``flops``       — matmul FLOPs (trip-count-corrected)
+  * ``hbm_bytes``   — bytes moved across post-fusion instruction
+                      boundaries (the HBM round-trips)
+  * ``peak_bytes``  — peak-live-buffer estimate from HLO liveness
+                      (``hlo_cost.liveness``) — the fits-on-a-device
+                      number; un-donated upper bound, see DESIGN.md §8
+  * ``ici/dcn_bytes`` + per-kind ``collectives`` counts
+  * ``num_partitions`` — the SPMD partition count the module was
+                      compiled for (budgets refuse to compare across
+                      partition counts)
+
+The rules register alongside the structural ones (same registry, same
+``Finding`` report):
+
+  * ``FlopBudget`` / ``BytesBudget`` / ``PeakMemoryBudget`` — hard caps,
+    instantiated either directly in an audit spec or from a committed
+    budget file (``analysis/budget.py``) with its per-metric tolerance.
+  * ``CollectiveBudget`` — which collective kinds may appear at all and
+    how many ICI/DCN bytes they may move.  The default instance allows
+    NOTHING: the 1-device step must stay collective-free.
+  * ``NoReplicatedParam`` — under a >1-partition mesh, a large param
+    leaf whose per-device buffer equals its global size is replicated:
+    every device pays full price for it.  The guard ROADMAP item 1
+    needs before the supertable is sharded (today it *documents* the
+    deliberately-replicated pointer tables at warning severity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+from repro.analysis.program import AuditProgram, label_matches
+from repro.analysis.rules import Rule, register
+from repro.launch import hlo_cost
+from repro.launch.dtypes import JNP_TO_HLO, shape_bytes
+
+METRICS = ("flops", "hbm_bytes", "peak_bytes", "ici_bytes", "dcn_bytes")
+
+_NUM_PARTITIONS = re.compile(r"num_partitions=(\d+)")
+_ENTRY_PARAM = re.compile(r"([\w.\-]+):\s*(\w+)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProfile:
+    """Per-entry-point quantitative profile, all numbers per device."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    peak_bytes: float = 0.0
+    param_bytes: float = 0.0
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    num_partitions: int = 1
+
+    def metric(self, name: str) -> float:
+        if name not in METRICS:
+            raise KeyError(f"unknown cost metric {name!r}; have {METRICS}")
+        return float(getattr(self, name))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["collectives"] = {k: float(v) for k, v in sorted(self.collectives.items())}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostProfile":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    @classmethod
+    def from_hlo_text(cls, text: str) -> "CostProfile":
+        cost = hlo_cost.analyze(text)
+        live = hlo_cost.liveness(text)
+        m = _NUM_PARTITIONS.search(text)
+        return cls(
+            flops=float(cost.flops),
+            hbm_bytes=float(cost.bytes),
+            peak_bytes=float(live.peak_bytes),
+            param_bytes=float(live.param_bytes),
+            ici_bytes=float(cost.ici_bytes),
+            dcn_bytes=float(cost.dcn_bytes),
+            collectives={k: float(v) for k, v in cost.coll.items()},
+            num_partitions=int(m.group(1)) if m else 1,
+        )
+
+
+def cost_profile(program: AuditProgram) -> CostProfile:
+    """The program's ``CostProfile``, computed once (AOT compile + HLO
+    walk) and cached on the program."""
+    if program._cost_profile is None:
+        program._cost_profile = CostProfile.from_hlo_text(program.compiled_text)
+    return program._cost_profile
+
+
+def _fmt(x: float) -> str:
+    return f"{x:,.0f}"
+
+
+def _over(current: float, budget: float) -> str:
+    if budget <= 0:
+        return f"{_fmt(current)} > budget 0"
+    return (
+        f"{_fmt(current)} exceeds budget {_fmt(budget)} "
+        f"(+{(current / budget - 1.0) * 100.0:.1f}%)"
+    )
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class FlopBudget(Rule):
+    """Matmul FLOPs per call must not exceed ``max_flops``."""
+
+    max_flops: float = math.inf
+    baseline: float | None = None  # the committed number, for the message
+
+    id = "flop-budget"
+
+    def check(self, program):
+        cur = cost_profile(program).metric("flops")
+        if cur <= self.max_flops:
+            return []
+        base = "" if self.baseline is None else (
+            f"; committed baseline {_fmt(self.baseline)}"
+        )
+        return [self.finding(
+            program, "", f"flops {_over(cur, self.max_flops)}{base}",
+        )]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class BytesBudget(Rule):
+    """HBM bytes moved per call must not exceed ``max_bytes``."""
+
+    max_bytes: float = math.inf
+    baseline: float | None = None
+
+    id = "bytes-budget"
+
+    def check(self, program):
+        cur = cost_profile(program).metric("hbm_bytes")
+        if cur <= self.max_bytes:
+            return []
+        base = "" if self.baseline is None else (
+            f"; committed baseline {_fmt(self.baseline)}"
+        )
+        return [self.finding(
+            program, "", f"hbm_bytes {_over(cur, self.max_bytes)}{base}",
+        )]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class PeakMemoryBudget(Rule):
+    """Estimated peak live bytes must not exceed ``max_bytes`` — the
+    budget that decides whether the config still fits a device."""
+
+    max_bytes: float = math.inf
+    baseline: float | None = None
+
+    id = "peak-memory-budget"
+
+    def check(self, program):
+        cur = cost_profile(program).metric("peak_bytes")
+        if cur <= self.max_bytes:
+            return []
+        base = "" if self.baseline is None else (
+            f"; committed baseline {_fmt(self.baseline)}"
+        )
+        return [self.finding(
+            program, "", f"peak_bytes {_over(cur, self.max_bytes)}{base}",
+        )]
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget(Rule):
+    """Only collective kinds in ``allow`` may appear, and their traffic
+    must stay within the ICI/DCN byte caps.  The default allows NOTHING
+    — the 1-device step's contract is zero collectives."""
+
+    allow: tuple[str, ...] = ()
+    max_ici_bytes: float = 0.0
+    max_dcn_bytes: float = 0.0
+
+    id = "collective-budget"
+
+    def check(self, program):
+        prof = cost_profile(program)
+        findings = []
+        for kind in sorted(prof.collectives):
+            if prof.collectives[kind] > 0 and kind not in self.allow:
+                allowed = f"allowed kinds: {list(self.allow)}" if self.allow \
+                    else "no collectives allowed"
+                findings.append(self.finding(
+                    program, "",
+                    f"collective {kind} x{prof.collectives[kind]:g} in the "
+                    f"compiled module; {allowed}",
+                ))
+        if prof.ici_bytes > self.max_ici_bytes:
+            findings.append(self.finding(
+                program, "", f"ici_bytes {_over(prof.ici_bytes, self.max_ici_bytes)}",
+            ))
+        if prof.dcn_bytes > self.max_dcn_bytes:
+            findings.append(self.finding(
+                program, "", f"dcn_bytes {_over(prof.dcn_bytes, self.max_dcn_bytes)}",
+            ))
+        return findings
+
+
+def _entry_param_shapes(text: str) -> list[tuple[str, str]]:
+    """(dtype, dims) of every entry-computation parameter in the compiled
+    module — per-device shapes, post-SPMD-partitioning."""
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            head = line.split("->")[0]
+            return [
+                (m.group(2), m.group(3)) for m in _ENTRY_PARAM.finditer(head)
+            ]
+    return []
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class NoReplicatedParam(Rule):
+    """Under a >1-partition compile, a large input leaf whose per-device
+    entry-parameter buffer equals its GLOBAL size is replicated — every
+    device holds the whole array.  ``allow`` names leaves replicated by
+    contract; ``severity="warning"`` documents known replication without
+    failing the gate (how the sharded-transition specs ride until
+    ROADMAP item 1 shards the supertable).  Matching is by (dtype, byte
+    size): exact per-device metadata is not in the HLO text, so a leaf
+    is only flagged when SOME entry param still has its full global
+    footprint — fail-open, never a false sharded-pass."""
+
+    min_bytes: int = 1 << 20
+    allow: tuple[str, ...] = ()
+    severity: str = "error"
+
+    id = "no-replicated-param"
+
+    def check(self, program):
+        labeled = program.labeled_invars()
+        if not labeled:
+            return [self.finding(
+                program, "",
+                "inputs could not be labeled (flat invars != arg leaves); "
+                "cannot attribute replicated params",
+            )]
+        prof = cost_profile(program)
+        if prof.num_partitions <= 1:
+            return [self.finding(
+                program, "",
+                "compiled for a single partition — nothing to prove; run "
+                "this spec under a multi-device mesh (check the audit "
+                "config's lane)",
+            )]
+        params = _entry_param_shapes(program.compiled_text)
+        if not params:
+            return [self.finding(
+                program, "",
+                "no entry parameters parsed from the compiled module; "
+                "cannot check replication",
+            )]
+        param_sizes = {(dt, shape_bytes(dt, dims)) for dt, dims in params}
+        findings = []
+        for lbl, var in labeled:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            dtype = getattr(aval, "dtype", None)
+            if shape is None or dtype is None:
+                continue
+            nbytes = int(math.prod(shape)) * int(
+                getattr(dtype, "itemsize", 1) or 1
+            )
+            if nbytes < self.min_bytes:
+                continue
+            if self.allow and label_matches(lbl, self.allow):
+                continue
+            hlo_dt = JNP_TO_HLO.get(str(dtype))
+            if hlo_dt is not None and (hlo_dt, nbytes) in param_sizes:
+                findings.append(self.finding(
+                    program, lbl,
+                    f"input {lbl} ({_fmt(nbytes)} bytes) appears at full "
+                    f"global size in the {prof.num_partitions}-partition "
+                    "module — replicated on every device; shard it or "
+                    "allowlist it",
+                ))
+        return findings

@@ -7,9 +7,12 @@ pytree path (``[1]['emb'][0][2]['ptr']``).  Rules then talk about inputs
 by *name* — "the ptr buffers", "the donated state leaves" — instead of by
 flat position, which is what makes audit specs declarative.
 
-Lowering (for donation/aliasing rules) is lazy and cached: tracing is
-milliseconds, lowering the full train step is seconds, and most rules
-only need the jaxpr.
+Lowering (for donation/aliasing rules) and AOT compilation (for the
+quantitative cost rules — the compiled module is what ``launch/hlo_cost``
+walks) are lazy and cached: tracing is milliseconds, lowering the full
+train step is seconds, compiling it is tens of seconds, and most rules
+only need the jaxpr.  Compilation is abstract end to end (AOT: lower +
+compile on ShapeDtypeStructs) — no buffer is ever allocated.
 """
 from __future__ import annotations
 
@@ -42,6 +45,9 @@ class AuditProgram:
     n_donated: int = 0
     _lower_thunk: Callable[[], str] | None = None
     _lowered_text: str | None = None
+    _compile_thunk: Callable[[], str] | None = None
+    _compiled_text: str | None = None
+    _cost_profile: Any = None  # cost_rules.cost_profile caches here
 
     @classmethod
     def capture(
@@ -68,11 +74,18 @@ class AuditProgram:
             len(jax.tree_util.tree_leaves(args[i])) for i in donate_argnums
         )
 
-        def lower() -> str:
-            jitted = fn if hasattr(fn, "lower") else jax.jit(
+        def jitted():
+            return fn if hasattr(fn, "lower") else jax.jit(
                 fn, donate_argnums=donate_argnums
             )
-            return jitted.lower(*args).as_text()
+
+        def lower() -> str:
+            return jitted().lower(*args).as_text()
+
+        def compile_() -> str:
+            # AOT: abstract args in, optimized per-device HLO text out —
+            # compiles the executable without allocating any buffer
+            return jitted().lower(*args).compile().as_text()
 
         return cls(
             name=name,
@@ -80,6 +93,7 @@ class AuditProgram:
             invar_labels=labels,
             n_donated=n_donated,
             _lower_thunk=lower,
+            _compile_thunk=compile_,
         )
 
     @property
@@ -91,6 +105,18 @@ class AuditProgram:
                 )
             self._lowered_text = self._lower_thunk()
         return self._lowered_text
+
+    @property
+    def compiled_text(self) -> str:
+        """Optimized (post-fusion, SPMD-partitioned) HLO of the AOT-compiled
+        entry point — the text the quantitative cost analysis walks."""
+        if self._compiled_text is None:
+            if self._compile_thunk is None:
+                raise RuntimeError(
+                    f"program {self.name!r} was built without a compilation"
+                )
+            self._compiled_text = self._compile_thunk()
+        return self._compiled_text
 
     def labeled_invars(self) -> tuple[tuple[str, Any], ...]:
         """(label, invar) pairs; empty labels mean capture couldn't match

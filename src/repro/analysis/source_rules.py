@@ -20,19 +20,35 @@ Three rules, each a bug class this repo actually hit:
     (``shard_map``, ``pallas``, ...) from there, so jax API graduation is
     a one-file change.
 
-Waivers are per-line: end the line with ``# audit: allow-<rule>``.
+Waivers are per-line: end the line with ``# audit: allow-<tag>``.  A
+waiver is itself audited (``stale-waiver``): a comment that suppresses no
+finding — the code it excused was fixed or moved, or the tag is
+misspelled — is an error, so the waiver inventory can only shrink to
+match reality.  Waivers are recognized in COMMENT tokens only
+(``tokenize``), never inside string literals, so prose *about* waivers
+(this docstring) neither suppresses nor goes stale.
 """
 from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import os
+import re
+import tokenize
 from typing import Iterator
 
-SOURCE_RULE_IDS = ("fuse-rows-twin", "no-int-cast", "no-raw-experimental")
+SOURCE_RULE_IDS = (
+    "fuse-rows-twin", "no-int-cast", "no-raw-experimental", "stale-waiver",
+)
+
+# the tags checks consume (waiver tags name the *bug class*, not the rule
+# id — ``no-int-cast`` findings are waived by ``allow-int-cast``)
+WAIVER_TAGS = ("fuse-rows-twin", "int-cast", "raw-experimental")
 
 _REDUCTIONS = ("sum", "mean", "max", "min", "prod", "dot")
 _COMPAT_BASENAME = "compat.py"
+_WAIVER_RE = re.compile(r"audit:\s*allow-([\w-]+)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,13 +63,38 @@ class SourceFinding:
         return dataclasses.asdict(self)
 
 
-def _waived(lines: list[str], lineno: int, rule: str) -> bool:
-    if not 1 <= lineno <= len(lines):
+class _Waivers:
+    """Per-file waiver ledger: which ``# audit: allow-<tag>`` comments
+    exist (COMMENT tokens only) and which of them actually suppressed a
+    finding.  Whatever is left over at the end of the file check is
+    stale."""
+
+    def __init__(self, text: str):
+        self.by_line: dict[int, str] = {}
+        self.used: set[int] = set()
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    m = _WAIVER_RE.search(tok.string)
+                    if m:
+                        self.by_line[tok.start[0]] = m.group(1)
+        except (SyntaxError, tokenize.TokenError):
+            # the ast.parse error path reports the syntax problem
+            pass
+
+    def waived(self, lineno: int, tag: str) -> bool:
+        if self.by_line.get(lineno) == tag:
+            self.used.add(lineno)
+            return True
         return False
-    return f"audit: allow-{rule}" in lines[lineno - 1]
+
+    def stale(self) -> Iterator[tuple[int, str]]:
+        for lineno, tag in sorted(self.by_line.items()):
+            if lineno not in self.used:
+                yield lineno, tag
 
 
-def _check_fuse_rows_twin(path, tree, lines) -> Iterator[SourceFinding]:
+def _check_fuse_rows_twin(path, tree, waivers) -> Iterator[SourceFinding]:
     for node in ast.walk(tree):
         if not isinstance(node, ast.ClassDef):
             continue
@@ -62,7 +103,7 @@ def _check_fuse_rows_twin(path, tree, lines) -> Iterator[SourceFinding]:
             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
         }
         if "fuse_rows" in defined and "fuse_rows_np" not in defined:
-            if _waived(lines, node.lineno, "fuse-rows-twin"):
+            if waivers.waived(node.lineno, "fuse-rows-twin"):
                 continue
             yield SourceFinding(
                 "fuse-rows-twin", "error", path, node.lineno,
@@ -90,7 +131,7 @@ def _imports_jax(tree: ast.AST) -> bool:
     return False
 
 
-def _check_int_cast(path, tree, lines) -> Iterator[SourceFinding]:
+def _check_int_cast(path, tree, waivers) -> Iterator[SourceFinding]:
     if not _imports_jax(tree):
         return
     for node in ast.walk(tree):
@@ -102,7 +143,7 @@ def _check_int_cast(path, tree, lines) -> Iterator[SourceFinding]:
             and len(node.args) == 1
             and _is_reduction_call(node.args[0])
         ):
-            if _waived(lines, node.lineno, "int-cast"):
+            if waivers.waived(node.lineno, "int-cast"):
                 continue
             yield SourceFinding(
                 "no-int-cast", "error", path, node.lineno,
@@ -117,7 +158,7 @@ def _check_int_cast(path, tree, lines) -> Iterator[SourceFinding]:
             and not node.args
             and not node.keywords
         ):
-            if _waived(lines, node.lineno, "int-cast"):
+            if waivers.waived(node.lineno, "int-cast"):
                 continue
             yield SourceFinding(
                 "no-int-cast", "error", path, node.lineno,
@@ -126,7 +167,7 @@ def _check_int_cast(path, tree, lines) -> Iterator[SourceFinding]:
             )
 
 
-def _check_raw_experimental(path, tree, lines) -> Iterator[SourceFinding]:
+def _check_raw_experimental(path, tree, waivers) -> Iterator[SourceFinding]:
     if os.path.basename(path) == _COMPAT_BASENAME:
         return
     for node in ast.walk(tree):
@@ -145,7 +186,7 @@ def _check_raw_experimental(path, tree, lines) -> Iterator[SourceFinding]:
                 and node.value.id == "jax"
             ):
                 hit = "jax.experimental attribute access"
-        if hit is None or _waived(lines, node.lineno, "raw-experimental"):
+        if hit is None or waivers.waived(node.lineno, "raw-experimental"):
             continue
         yield SourceFinding(
             "no-raw-experimental", "error", path, node.lineno,
@@ -170,10 +211,19 @@ def check_source_file(path: str) -> list[SourceFinding]:
         return [SourceFinding(
             "syntax", "error", path, e.lineno or 0, f"does not parse: {e.msg}"
         )]
-    lines = text.splitlines()
+    waivers = _Waivers(text)
     findings: list[SourceFinding] = []
     for check in _CHECKS:
-        findings.extend(check(path, tree, lines))
+        findings.extend(check(path, tree, waivers))
+    for lineno, tag in waivers.stale():
+        known = "" if tag in WAIVER_TAGS else (
+            f" (unknown tag; known tags: {', '.join(WAIVER_TAGS)})"
+        )
+        findings.append(SourceFinding(
+            "stale-waiver", "error", path, lineno,
+            f"`# audit: allow-{tag}` suppresses no finding{known} — the "
+            "code it excused is gone; remove the waiver",
+        ))
     return findings
 
 

@@ -1,0 +1,45 @@
+"""The single HLO dtype-size table shared by every HLO-text analysis.
+
+``hlo_cost.py`` and ``roofline.py`` each used to carry a private copy and
+the copies diverged (one spelled ``f8e4m3fn``, the other ``f8e4m3`` — so
+one of them silently sized fp8 buffers as the 4-byte fallback).  This
+module is now the ONE place a dtype's byte width lives; both spellings
+are present because XLA has used both across versions.
+
+``JNP_TO_HLO`` maps the ``str(aval.dtype)`` names rules see on traced
+programs to the short HLO names the compiled text uses, so analyses that
+correlate jaxpr inputs with HLO entry parameters (``NoReplicatedParam``)
+share the same vocabulary.
+"""
+from __future__ import annotations
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+# str(jnp dtype) -> HLO short name (the subset this repo's programs use)
+JNP_TO_HLO = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+    "int64": "s64", "uint64": "u64", "int32": "s32", "uint32": "u32",
+    "int16": "s16", "uint16": "u16", "int8": "s8", "uint8": "u8",
+    "bool": "pred", "complex64": "c64", "complex128": "c128",
+}
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    """Byte size of one ``dtype[dims]`` HLO shape (``dims`` the raw
+    comma-joined digit string, e.g. ``"128,512"``; ``""`` is a scalar).
+    Unknown dtypes fall back to 4 bytes — both former copies did, and a
+    wrong-but-nonzero size keeps ratios sane while a KeyError would kill
+    the whole analysis over one exotic buffer."""
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)

@@ -29,12 +29,7 @@ from typing import Any
 from repro.compat import xla_cost_analysis  # noqa: F401  — re-exported: the
 # baseline this module corrects; normalizes the dict/list[dict] API drift
 # of Compiled.cost_analysis() across jax versions.
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
-}
+from repro.launch.dtypes import shape_bytes as _shape_bytes
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{")
 _INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
@@ -59,11 +54,7 @@ _SKIP_BYTES = {
 
 
 def _nbytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    return _shape_bytes(dtype, dims)
 
 
 def _shape_list_bytes(text: str) -> int:
@@ -348,16 +339,159 @@ def _fusion_bytes(comp: Computation, ins: Instr, callee) -> float:
     return total
 
 
-def analyze(hlo_text: str) -> Cost:
-    comps = parse_module(hlo_text)
-    entry = None
+def _entry_name(hlo_text: str, comps: dict) -> str:
     for line in hlo_text.splitlines():
         if line.startswith("ENTRY"):
             m = _COMP_HEADER.match(line.strip())
             if m:
-                entry = m.group(1)
+                return m.group(1)
             break
-    if entry is None:
-        # fall back: the computation named main-ish
-        entry = next((n for n in comps if "main" in n), next(iter(comps)))
-    return _comp_cost(comps, entry, {})
+    # fall back: the computation named main-ish
+    return next((n for n in comps if "main" in n), next(iter(comps)))
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    return _comp_cost(comps, _entry_name(hlo_text, comps), {})
+
+
+# --- peak-live-buffer estimation ---------------------------------------------
+#
+# The number that decides whether a config FITS a device: walk each
+# computation in (topological = textual) order, track which result buffers
+# are live (def index -> last-use index), and take the max running sum.
+# Estimator contract (DESIGN.md §8):
+#   * counted:  parameter buffers (live from entry to last use), every
+#     non-aliasing instruction result from its definition to its last use,
+#     the root to the end of its computation, and — at while/call/
+#     conditional sites — the callee's own peak minus its parameter bytes
+#     (the params alias the caller's operand buffers, which are already
+#     live at the call site).
+#   * aliased away: tuple / get-tuple-element / bitcast define no storage;
+#     their uses extend the liveness of the aliased source buffer.
+#   * fusion bodies contribute nothing (fused intermediates live in
+#     registers); the fusion's operands/result are caller-side buffers.
+#   * NOT modeled: input-output aliasing (donation) — the estimate is the
+#     un-donated upper bound — and backend scratch allocations.
+
+_ALIAS_OPS = {"tuple", "get-tuple-element", "bitcast"}
+_BODY_CALLS = {"while", "call", "conditional"}
+
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_NAMED_CALLEES = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)"
+    r"=%?([\w.\-]+)"
+)
+
+
+def _callee_names(line: str) -> list[str]:
+    names = [m.group(1) for m in _NAMED_CALLEES.finditer(line)]
+    bm = _BRANCHES.search(line)
+    if bm:
+        names.extend(_OPERANDS.findall(bm.group(1)))
+    return names
+
+
+def _operand_names(ins: Instr) -> list[str]:
+    """%names inside the instruction's CALL parens.  The call paren is the
+    one right after the opcode — for tuple-result instructions the first
+    ``(`` in the line belongs to the result *type* — and the operand list
+    may itself contain tuple-typed (parenthesized) operands, so scan to
+    the balancing close instead of the first ``)``."""
+    m = re.search(rf"\b{re.escape(ins.opcode)}\(", ins.line)
+    if not m:
+        return []
+    start = m.end()
+    depth = 1
+    for i in range(start, len(ins.line)):
+        ch = ins.line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERANDS.findall(ins.line[start:i])
+    return _OPERANDS.findall(ins.line[start:])
+
+
+@dataclasses.dataclass
+class LivenessEstimate:
+    peak_bytes: float = 0.0
+    param_bytes: float = 0.0
+
+
+def _comp_peak(comps: dict, name: str, memo: dict) -> LivenessEstimate:
+    if name in memo:
+        return memo[name]
+    memo[name] = LivenessEstimate()  # cycle guard
+    comp = comps.get(name)
+    if comp is None or not comp.instrs:
+        return memo[name]
+    n = len(comp.instrs)
+
+    alias_src = {
+        ins.name: ops[0]
+        for ins in comp.instrs
+        if ins.opcode in _ALIAS_OPS and (ops := _operand_names(ins))
+    }
+
+    def root_of(nm: str) -> str:
+        seen = set()
+        while nm in alias_src and nm not in seen:
+            seen.add(nm)
+            nm = alias_src[nm]
+        return nm
+
+    size: dict[str, float] = {}  # root buffer -> bytes
+    def_at: dict[str, int] = {}
+    last_use: dict[str, int] = {}
+    callee_extra = [0.0] * n
+    param_bytes = 0.0
+    for i, ins in enumerate(comp.instrs):
+        rt = root_of(ins.name)
+        if ins.opcode in _ALIAS_OPS:
+            last_use[rt] = max(last_use.get(rt, i), i)
+        else:
+            size[rt] = float(ins.result_bytes)
+            def_at.setdefault(rt, i)
+        if ins.opcode == "parameter":
+            param_bytes += float(ins.result_bytes)
+            def_at[rt] = 0
+        for op_name in _operand_names(ins):
+            r = root_of(op_name)
+            last_use[r] = max(last_use.get(r, 0), i)
+        if ins.opcode in _BODY_CALLS:
+            for callee in _callee_names(ins.line):
+                sub = _comp_peak(comps, callee, memo)
+                callee_extra[i] = max(
+                    callee_extra[i],
+                    max(0.0, sub.peak_bytes - sub.param_bytes),
+                )
+    # the root value (and, for a root tuple, everything it aliases) lives
+    # to the end of the computation
+    root_ins = comp.root or comp.instrs[-1]
+    for op_name in _operand_names(root_ins):
+        last_use[root_of(op_name)] = n
+    last_use[root_of(root_ins.name)] = n
+
+    add_at: dict[str, list] = {}
+    rm_after: dict[str, list] = {}
+    for rt, i in def_at.items():
+        if rt in size:
+            add_at.setdefault(i, []).append(size[rt])
+            end = min(last_use.get(rt, i), n - 1)
+            rm_after.setdefault(end, []).append(size[rt])
+    peak = live = 0.0
+    for i in range(n):
+        live += sum(add_at.get(i, ()))
+        peak = max(peak, live + callee_extra[i])
+        live -= sum(rm_after.get(i, ()))
+    memo[name] = LivenessEstimate(peak_bytes=peak, param_bytes=param_bytes)
+    return memo[name]
+
+
+def liveness(hlo_text: str) -> LivenessEstimate:
+    """Peak-live-buffer estimate of the module's entry computation (and its
+    entry parameter bytes) — see the contract comment above."""
+    comps = parse_module(hlo_text)
+    return _comp_peak(comps, _entry_name(hlo_text, comps), {})

@@ -20,17 +20,12 @@ from __future__ import annotations
 import dataclasses
 import re
 
+from repro.launch.dtypes import shape_bytes
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s
 ICI_BW = 50e9  # bytes/s/link
 DCN_BW = 25e9  # bytes/s/chip (inter-pod)
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
 
 _COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -49,16 +44,8 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
 _SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
 def _tuple_bytes(inner: str) -> int:
-    return sum(_shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(inner))
+    return sum(shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(inner))
 
 
 def _group_stride(line: str) -> int:
@@ -126,7 +113,7 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
         if not m:
             continue
         inner, dtype, dims, op = m.groups()
-        nbytes = _tuple_bytes(inner) if inner is not None else _shape_bytes(dtype, dims)
+        nbytes = _tuple_bytes(inner) if inner is not None else shape_bytes(dtype, dims)
         mult = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                 "all-to-all": 1.0, "collective-permute": 1.0}[op]
         counts[op] = counts.get(op, 0) + 1

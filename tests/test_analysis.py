@@ -64,10 +64,14 @@ X = jnp.ones((8,), jnp.float32)
 
 
 def test_registry_has_every_shipped_rule():
+    import repro.analysis.cost_rules  # noqa: F401 — registers the cost rules
+
     assert set(RULES) == {
         "launch-budget", "no-device-gather", "donation-coverage",
         "dtype-hygiene", "no-host-callback", "no-transfers",
         "constant-capture", "dead-input",
+        "flop-budget", "bytes-budget", "peak-memory-budget",
+        "collective-budget", "no-replicated-param",
     }
 
 
@@ -306,6 +310,50 @@ def test_int_cast_rule_scoped_to_jax_modules(tmp_path):
             return int(x.sum())  # audit: allow-int-cast
     """)
     assert check_source_file(waived) == []
+
+
+def test_stale_waiver_is_itself_a_finding(tmp_path):
+    # the excused int() was removed but the waiver stayed behind
+    stale = _write(tmp_path, "stale.py", """
+        import jax
+
+        def f(x):
+            return x.sum()  # audit: allow-int-cast
+    """)
+    found = check_source_file(stale)
+    assert [f.rule for f in found] == ["stale-waiver"]
+    assert "allow-int-cast" in found[0].message
+    # a misspelled tag suppresses nothing AND is called out as unknown
+    typo = _write(tmp_path, "typo.py", """
+        import jax
+
+        def f(x):
+            return int(x.sum())  # audit: allow-int-casts
+    """)
+    rules = sorted(f.rule for f in check_source_file(typo))
+    assert rules == ["no-int-cast", "stale-waiver"]
+    assert any("unknown tag" in f.message for f in check_source_file(typo))
+
+
+def test_waiver_text_inside_strings_is_inert(tmp_path):
+    # prose about waivers (docstrings, messages) is neither a suppression
+    # nor stale — only COMMENT tokens count
+    doc = _write(tmp_path, "doc.py", '''
+        import jax
+
+        def f(x):
+            """Host-side casts need `# audit: allow-int-cast` waivers."""
+            return x.sum()
+    ''')
+    assert check_source_file(doc) == []
+    # ...and a string does NOT suppress a real finding on its line
+    inline = _write(tmp_path, "inline.py", """
+        import jax
+
+        def f(x):
+            return int(x.sum()), "audit: allow-int-cast"
+    """)
+    assert [f.rule for f in check_source_file(inline)] == ["no-int-cast"]
 
 
 def test_raw_experimental_rule_excepts_compat(tmp_path):
