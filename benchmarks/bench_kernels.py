@@ -21,6 +21,16 @@ throughput (sync conservative vs async device path), written to
 3-group collection, and the unified single-launch supertable (plus the
 host-translated-rows variant) — launches/step and emb fwd+bwd latency,
 written to ``BENCH_fuse.json`` (also a CI artifact).
+
+``--shard`` compares the replicated vs model-sharded DLRM train step at
+the FULL Criteo vocabularies, AOT only (abstract lower + compile — zero
+array allocation, so the 12.8 GB replicated state never exists): pallas
+launches, per-kind collective counts and ICI/DCN bytes from
+``repro.launch.hlo_cost``, and per-device state bytes (supertable slab,
+optimizer moments, pointer tables) from the step's own output shardings,
+written to ``BENCH_shard.json`` (also a CI artifact).  Needs a
+multi-device runtime; the CLI re-execs itself under a forced 4-device
+CPU when launched on one device.
 """
 import json
 import time
@@ -447,6 +457,95 @@ def bench_stream(out=print, json_path="BENCH_stream.json",
     return result
 
 
+def bench_shard(out=print, json_path="BENCH_shard.json"):
+    """Replicated vs model-sharded DLRM train step at full Criteo scale.
+
+    Everything here is ahead-of-time: the step is built from
+    ShapeDtypeStructs, lowered, and compiled — no array is ever
+    allocated, so the full-vocabulary comparison runs on a laptop.  Per
+    variant we report the structural numbers the sharding PR claims:
+    pallas launches per step (unchanged by sharding), the per-kind
+    collective counts + ICI/DCN bytes of the partitioned module
+    (``hlo_cost.analyze``), per-device entry-parameter bytes
+    (``hlo_cost.liveness``), and the exact per-device state footprint —
+    supertable slab, optimizer moments, pointer/stat buffers — read off
+    the step's own output shardings via ``Sharding.shard_shape``."""
+    import dataclasses
+    import math
+
+    from repro.analysis import walker
+    from repro.configs import dlrm_criteo
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_dlrm_train_step
+    from repro.optim import sgd
+
+    n = jax.device_count()
+    assert n > 1, "bench_shard needs a multi-device runtime (CLI forces 4)"
+
+    def subtree_bytes(shape_tree, shard_tree):
+        shapes = jax.tree_util.tree_leaves(shape_tree)
+        shards = jax.tree_util.tree_leaves(shard_tree)
+        glob = sum(s.size * s.dtype.itemsize for s in shapes)
+        per = sum(
+            math.prod(sh.shard_shape(s.shape)) * s.dtype.itemsize
+            for s, sh in zip(shapes, shards)
+        )
+        return {"global": glob, "per_device": per}
+
+    variants = {}
+    for name, model in (("replicated", 1), ("sharded", n)):
+        cfg = dataclasses.replace(dlrm_criteo.CONFIG, emb_k_multiple=model)
+        mesh = make_host_mesh(data=1, model=model)
+        jitted, (state_shape, batch_struct), (state_sh, _) = (
+            build_dlrm_train_step(
+                cfg, mesh, batch_size=32, accum=1,
+                optimizer=sgd(momentum=0.9),
+            )
+        )
+        launches = walker.count_primitive(
+            jax.make_jaxpr(jitted)(state_shape, batch_struct), "pallas_call"
+        )
+        text = jitted.lower(state_shape, batch_struct).compile().as_text()
+        cost = hlo_cost.analyze(text)
+        live = hlo_cost.liveness(text)
+        variants[name] = {
+            "model_shards": model,
+            "pallas_launches": launches,
+            "collectives": {k: int(v) for k, v in sorted(cost.coll.items())},
+            "ici_bytes": cost.ici_bytes,
+            "dcn_bytes": cost.dcn_bytes,
+            "entry_param_bytes_per_device": live.param_bytes,
+            "state_bytes": {
+                "total": subtree_bytes(state_shape, state_sh),
+                "emb_slab": subtree_bytes(
+                    state_shape.params["emb"], state_sh.params["emb"]
+                ),
+                "opt_moments": subtree_bytes(state_shape.opt, state_sh.opt),
+                "emb_buffers": subtree_bytes(state_shape.ebuf, state_sh.ebuf),
+            },
+        }
+        out(f"{name}: launches={launches} "
+            f"collectives={variants[name]['collectives']} "
+            f"state/device={variants[name]['state_bytes']['total']['per_device'] / 1e6:.1f} MB")
+
+    rep = variants["replicated"]["state_bytes"]["total"]["per_device"]
+    shd = variants["sharded"]["state_bytes"]["total"]["per_device"]
+    result = {
+        "backend": jax.default_backend(),
+        "n_devices": n,
+        "config": "dlrm_criteo (full Criteo vocabularies, AOT — no arrays)",
+        "variants": variants,
+        "per_device_state_ratio": rep / shd if shd else None,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out(f"per-device state: replicated {rep / 1e6:.1f} MB -> "
+        f"sharded {shd / 1e6:.1f} MB ({rep / shd:.2f}x)")
+    out(f"wrote {json_path}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -457,6 +556,8 @@ if __name__ == "__main__":
                     help="only the dense-vs-sketch tracker bench")
     ap.add_argument("--fuse", action="store_true",
                     help="only the looped/3-group/unified launch bench")
+    ap.add_argument("--shard", action="store_true",
+                    help="replicated-vs-sharded AOT comparison (multi-device)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
     if args.stream:
@@ -465,6 +566,26 @@ if __name__ == "__main__":
         bench_collection(json_path=args.json or "BENCH_collection.json")
     elif args.fuse:
         bench_fuse(json_path=args.json or "BENCH_fuse.json")
+    elif args.shard:
+        if jax.device_count() < 2:
+            # jax is initialized by now — device count is baked in.  Re-exec
+            # with a forced 4-device CPU topology instead.
+            import os
+            import subprocess
+            import sys
+
+            env = dict(
+                os.environ,
+                JAX_PLATFORMS="cpu",
+                XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4"),
+            )
+            sys.exit(subprocess.call(
+                [sys.executable, __file__, "--shard",
+                 "--json", args.json or "BENCH_shard.json"],
+                env=env,
+            ))
+        bench_shard(json_path=args.json or "BENCH_shard.json")
     else:
         main()
         bench_collection(json_path=args.json or "BENCH_collection.json")

@@ -22,15 +22,16 @@ The ``dlrm_criteo`` bundle audits the four canonical programs:
                        and ZERO reads of the ptr/hs pointer tables
                        (DESIGN.md §4's pod contract).
 
-The ``*_sharded`` bundles audit the distributed CCE transition
-(``cluster_sharded`` / ``assign_all_sharded`` over a mesh spanning every
-visible device): zero pallas launches, clean dtypes, and a
-``CollectiveBudget`` naming exactly which collective kinds the psum-based
-k-means and the sharded full-vocab assignment may emit.
-``NoReplicatedParam`` rides at WARNING severity — the (c, d1) pointer
-table is deliberately replicated until ROADMAP item 1 shards the
-supertable, and the warning documents that debt on every run without
-failing the gate.
+The ``*_sharded`` bundles audit the distributed entry points: the CCE
+transition (``cluster_sharded`` / ``assign_all_sharded`` over a mesh
+spanning every visible device — zero pallas launches, pointer operands
+entering id-SHARDED) and the model-parallel train step
+(``train_step_sharded``: supertable + moments codebook-sharded, batch
+ids routed by all-to-all — see ``launch.steps.build_dlrm_train_step``).
+Each carries a ``CollectiveBudget`` naming exactly which ICI collective
+kinds it may emit (and pinning DCN traffic to zero) plus
+``NoReplicatedParam`` at ERROR severity: since ROADMAP item 1 landed, no
+O(vocab) leaf may enter any sharded program replicated.
 
 Cost rules (``spec.cost_rules``) are separate from structural rules:
 they AOT-compile the entry point (seconds per program instead of
@@ -280,71 +281,141 @@ def _data_mesh():
     import numpy as np
     from jax.sharding import Mesh
 
-    return Mesh(np.asarray(jax.devices()), ("data",))
+    from repro.launch.mesh import DATA_AXIS
+
+    return Mesh(np.asarray(jax.devices()), (DATA_AXIS,))
+
+
+def _cce_shardings(mesh, table):
+    """Input shardings for the transition entry points: the (c, d1)
+    pointer table enters SHARDED at its at-rest layout
+    (``mesh.ptr_partition_spec`` — id axis when the vocab divides, column
+    axis for Criteo's ragged vocabs), everything else replicated.
+    Pre-jitting the capture with these is what lets ``NoReplicatedParam``
+    run at error severity — an audit that handed the programs replicated
+    pointers would flag its own harness."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import DATA_AXIS, ptr_partition_spec
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    nsh = mesh.shape[DATA_AXIS]
+    params_sh = {"tables": ns(P())}
+    buffers_sh = {
+        "ptr": ns(ptr_partition_spec(table.c, table.d1, nsh, DATA_AXIS)),
+        "hs": ns(P()),
+        "epoch": ns(P()),
+    }
+    return jax, ns, params_sh, buffers_sh
 
 
 def _build_cluster_sharded(cfg):
-    import jax
     import jax.numpy as jnp
 
     table = _largest_cce(cfg)
     mesh = _data_mesh()
     params, buffers = _abstract_cce_state(table)
+    jax, ns, params_sh, buffers_sh = _cce_shardings(mesh, table)
+    from jax.sharding import PartitionSpec as P
+
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     chunk = cfg.emb_cluster_chunk or None
-    return AuditProgram.capture(
+    jitted = jax.jit(
         lambda k, p, b: table.cluster_sharded(
             k, p, b, mesh, chunk_size=chunk, use_kernel=False
         ),
-        key, params, buffers, name="cluster_sharded",
+        in_shardings=(ns(P()), params_sh, buffers_sh),
+    )
+    return AuditProgram.capture(
+        jitted, key, params, buffers, name="cluster_sharded",
     )
 
 
 def _build_assign_all_sharded(cfg):
-    import jax
     import jax.numpy as jnp
 
     table = _largest_cce(cfg)
     mesh = _data_mesh()
     params, buffers = _abstract_cce_state(table)
+    jax, ns, params_sh, buffers_sh = _cce_shardings(mesh, table)
+    from jax.sharding import PartitionSpec as P
+
     centroids = jax.ShapeDtypeStruct(
         (table.c, table.k, table.dsub), jnp.float32
     )
     chunk = cfg.emb_cluster_chunk or None
-    return AuditProgram.capture(
+    jitted = jax.jit(
         lambda p, b, cen: table.assign_all_sharded(
             p, b, cen, mesh, chunk_size=chunk, use_kernel=False
         ),
-        params, buffers, centroids, name="assign_all_sharded",
+        in_shardings=(params_sh, buffers_sh, ns(P())),
+    )
+    return AuditProgram.capture(
+        jitted, params, buffers, centroids, name="assign_all_sharded",
+    )
+
+
+def _build_train_step_sharded(cfg):
+    """The model-parallel DLRM train step over a (1, n_devices) mesh —
+    the slab/moments/ptr enter sharded per ``dlrm_state_specs``, batch
+    ids arrive host-translated and pre-bucketed, and the id routing runs
+    as in-step all-to-all."""
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_dlrm_train_step
+    from repro.optim import sgd
+
+    n = len(jax.devices())
+    mesh = make_host_mesh(data=1, model=n)
+    cfg = _dc.replace(cfg, emb_k_multiple=n)
+    jitted, (state_shape, batch_struct), _ = build_dlrm_train_step(
+        cfg, mesh, batch_size=32, accum=1, optimizer=sgd(momentum=0.9),
+    )
+    return AuditProgram.capture(
+        jitted, state_shape, batch_struct,
+        name="train_step_sharded", donate_argnums=(0,),
     )
 
 
 def dlrm_sharded_audits(cfg):
-    """Audit bundle for the distributed CCE transition entry points.
+    """Audit bundle for the distributed CCE entry points.
 
     The byte caps here are deliberately loose (the committed budget file
     supplies the tight, config-specific numbers); what the spec-level
-    ``CollectiveBudget`` pins is the *kinds*: the psum-based distributed
-    k-means and the lazily-gathered sharded pointer may emit all-reduce
-    and all-gather, nothing else, and nothing over DCN.
-    ``NoReplicatedParam`` runs at warning severity: the (c, d1) pointer
-    table IS replicated today (ROADMAP item 1), and the warning keeps
-    that debt visible on every audit without failing CI."""
-    # all-reduce: the psum'd k-means moments; all-gather: the sharded
-    # pointer gathered where consumed; collective-permute: XLA's lowering
-    # of halo/reshard moves inside the same patterns
-    transition_collectives = CollectiveBudget(
-        allow=("all-reduce", "all-gather", "collective-permute"),
+    ``CollectiveBudget`` pins is the *kinds*: all-reduce (the psum'd
+    k-means moments), all-gather (the sharded pointer gathered where
+    consumed), all-to-all (the step's batch-id routing, and the
+    at-rest → id-sharded pointer reshard when a ragged vocab forces
+    column-sharded storage — ``mesh.ptr_partition_spec``), plus
+    collective-permute (XLA's lowering of halo/reshard moves inside the
+    same patterns) — nothing else, and nothing over DCN.
+    ``NoReplicatedParam`` runs at ERROR severity: every large slab (the
+    supertable, its moments, the pointer table) must enter its program
+    sharded, and a replicated copy reappearing anywhere fails the audit
+    outright."""
+    ici_collectives = CollectiveBudget(
+        allow=(
+            "all-to-all",
+            "all-reduce",
+            "all-gather",
+            "collective-permute",
+        ),
         max_ici_bytes=math.inf,
         max_dcn_bytes=0.0,
     )
-    replication_debt = NoReplicatedParam(severity="warning")
+    replication_debt = NoReplicatedParam()
     return (
         AuditSpec(
             "cluster_sharded",
             lambda: _build_cluster_sharded(cfg),
             (LaunchBudget(0), DeadInput(allow=_EPOCH_ALLOW), *_HYGIENE),
-            cost_rules=(transition_collectives, replication_debt),
+            cost_rules=(ici_collectives, replication_debt),
         ),
         AuditSpec(
             "assign_all_sharded",
@@ -354,7 +425,19 @@ def dlrm_sharded_audits(cfg):
                 DeadInput(allow=_EPOCH_ALLOW),
                 *_HYGIENE,
             ),
-            cost_rules=(transition_collectives, replication_debt),
+            cost_rules=(ici_collectives, replication_debt),
+        ),
+        AuditSpec(
+            "train_step_sharded",
+            lambda: _build_train_step_sharded(cfg),
+            (
+                LaunchBudget(2),
+                DonationCoverage(),
+                NoDeviceGatherOf(("ptr", "hs")),
+                DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
+                *_HYGIENE,
+            ),
+            cost_rules=(ici_collectives, replication_debt),
         ),
     )
 

@@ -74,9 +74,21 @@ def save_checkpoint(directory: str, step: int, tree: Pytree, *, extra: dict | No
             [k, len(jax.tree.leaves(tree[k]))] for k in sorted(tree)
         ]
     for i, leaf in enumerate(flat):
+        # device_get on a multi-device jax.Array assembles the GLOBAL
+        # array from its addressable shards — checkpoints are always
+        # stored in the unsharded 1-device layout, which is what makes a
+        # sharded trainer's checkpoint restore into a 1-device trainer
+        # (and vice versa) without a dedicated converter
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-        manifest["leaves"].append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        entry = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        sharding = getattr(leaf, "sharding", None)
+        spec = getattr(sharding, "spec", None)
+        if spec is not None and any(s is not None for s in spec):
+            # informational: how the WRITER sharded this leaf (the reader
+            # places leaves per its own mesh via ``shardings=``)
+            entry["sharding"] = str(spec)
+        manifest["leaves"].append(entry)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -269,6 +281,14 @@ class CheckpointManager:
         for _, path in ckpts[: -self.keep_last]:
             shutil.rmtree(path, ignore_errors=True)
 
-    def restore_latest(self, template: Pytree):
+    def restore_latest(self, template: Pytree, *, shardings: Pytree | None = None):
+        """``shardings`` (a tree of ``jax.sharding.Sharding`` matching the
+        restored tree, or a prefix thereof) places the host arrays onto
+        the restore mesh — the cross-mesh round-trip: a 1-device
+        checkpoint restores sharded, a sharded checkpoint restores onto
+        one device, without either side knowing the other's mesh."""
         self.wait()
-        return load_checkpoint(self.directory, template=template)
+        step, tree, extra = load_checkpoint(self.directory, template=template)
+        if shardings is not None:
+            tree = reshard_restore(tree, shardings)
+        return step, tree, extra

@@ -16,6 +16,21 @@ try:  # jax >= 0.4.35 exports it at top level as jax.shard_map
 except AttributeError:  # 0.4.x: experimental home
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off.
+
+    Bodies that call pallas kernels (custom_vjp around ``pallas_call``)
+    have no replication rule on the 0.4.x line, so the checker refuses
+    them outright.  The flag was renamed ``check_rep`` -> ``check_vma``
+    across jax versions; try the modern spelling first."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
 # pallas has no stable top-level home yet; this is the ONE sanctioned
 # import of it (kernels do `from repro.compat import pallas as pl`, and
 # the no-raw-experimental source rule keeps it that way)

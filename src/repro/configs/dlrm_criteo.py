@@ -43,8 +43,13 @@ STREAM = StreamConfig(
 )
 
 
-def reduced(emb_method: str = "cce", cap: int = 512) -> DLRMConfig:
-    """Small synthetic-Criteo config for CPU training runs."""
+def reduced(emb_method: str = "cce", cap: int = 512,
+            k_multiple: int = 1) -> DLRMConfig:
+    """Small synthetic-Criteo config for CPU training runs.
+
+    ``k_multiple`` is the model-parallel shard count the supertable
+    codebook axis must divide by (sharded trainers pass the model mesh
+    size; the layouts stay bit-interconvertible — see DLRMConfig)."""
     return DLRMConfig(
         vocab_sizes=(1000, 5000, 20000, 100, 50000),
         n_dense=13,
@@ -53,6 +58,7 @@ def reduced(emb_method: str = "cce", cap: int = 512) -> DLRMConfig:
         top_mlp=(64, 1),
         emb_method=emb_method,
         emb_param_cap=cap,
+        emb_k_multiple=k_multiple,
     )
 
 

@@ -42,6 +42,7 @@ from repro.core import embeddings as emb_lib
 from repro.core import hashing
 from repro.core import kmeans as km
 from repro.kernels import ops as kops
+from repro.launch.mesh import DATA_AXIS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,6 +302,56 @@ class CCE:
         )
         return self._finish_transition(k2, centroids, new_ptr, buffers)
 
+    def _ptr_padded(self, ptr, d1_pad: int):
+        """(c, d1) -> (c, d1_pad), tail repeating the last column so an
+        even id-axis shard exists; padded entries are either masked out
+        or produce row-wise duplicates that change no result."""
+        ptr = jnp.asarray(ptr)
+        if d1_pad > self.d1:
+            ptr = jnp.concatenate(
+                [ptr, jnp.tile(ptr[:, -1:], (1, d1_pad - self.d1))], axis=1
+            )
+        return ptr
+
+    def materialize_sharded(self, params, buffers, ids, mesh, *,
+                            axis_name: str = DATA_AXIS):
+        """``materialize`` for arbitrary (scattered) ids against an
+        ID-SHARDED pointer table — no shard ever holds the full (c, d1)
+        ptr.  Shard ``s`` owns the contiguous id slice
+        ``[s*d1_loc, (s+1)*d1_loc)``: it gathers main rows for the sample
+        ids it owns, zeros the rest, and a psum assembles the full main
+        part on every shard (exactly one non-zero term per id, so the
+        sum is bit-exact regardless of reduction order).  The helper
+        part needs only the tiny (c, 2) hash pack and is computed
+        replicated; main + helper keeps ``materialize``'s addition
+        order, so a 1-device axis reproduces it bit-exactly."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        nsh = mesh.shape[axis_name]
+        d1_loc = (self.d1 + nsh - 1) // nsh
+        ptr = self._ptr_padded(buffers["ptr"], d1_loc * nsh)
+        hs = jnp.asarray(buffers["hs"])
+        tabs = params["tables"]
+
+        def body(ptr_local):
+            lo = jax.lax.axis_index(axis_name) * d1_loc
+            owned = (ids >= lo) & (ids < lo + d1_loc)
+            local = jnp.clip(ids - lo, 0, d1_loc - 1)
+            main_rows = ptr_local[:, local]  # (c, n)
+            main = jax.vmap(lambda t, r: t[r])(tabs[:, 0], main_rows)
+            main = jnp.where(owned[None, :, None], main, 0)
+            main = jax.lax.psum(main, axis_name)
+            helper = jax.vmap(lambda t, r: t[r])(
+                tabs[:, 1], self._helper_rows({"hs": hs}, ids)
+            )
+            return main + helper
+
+        return compat.shard_map_unchecked(
+            body, mesh=mesh, in_specs=(P(None, axis_name),), out_specs=P(),
+        )(ptr)
+
     def cluster_sharded(
         self,
         key,
@@ -308,7 +359,7 @@ class CCE:
         buffers,
         mesh,
         *,
-        axis_name: str = "data",
+        axis_name: str = DATA_AXIS,
         sample_ids: jax.Array | None = None,
         sample_weights: jax.Array | None = None,
         niter: int = 50,
@@ -317,12 +368,17 @@ class CCE:
         use_kernel: bool | None = None,
     ):
         """Distributed transition: BOTH phases run data-parallel over
-        ``axis_name``.  The k-means phase shards the sample (local
-        (sum, count) moments + psum — see ``kmeans.distributed_kmeans``);
-        the full-vocab assignment phase shards the id range
-        (``assign_all_sharded``) and returns the complete (c, d1) pointer
-        as one global array, sharded over ids, gathered where consumed.
-        Sample weights shard with the points.  On a 1-device axis this
+        ``axis_name``, and the (c, d1) pointer table only ever appears
+        ID-SHARDED (``no-replicated-param`` holds at error severity for
+        the captured transition programs).  The sample phase assembles
+        the sample embeddings from the sharded ptr via masked psum
+        (``materialize_sharded``); the k-means phase shards the sample
+        points (local (sum, count) moments + psum — see
+        ``kmeans.distributed_kmeans``); the full-vocab assignment phase
+        shards the id range (``assign_all_sharded``) and returns the
+        complete (c, d1) pointer as one global array, sharded over ids,
+        gathered only where a consumer needs remote rows.  Sample
+        weights shard with the points.  On a 1-device axis this
         reproduces ``cluster()`` exactly (same key schedule; the
         collectives degenerate to identity)."""
         from jax.sharding import PartitionSpec as P
@@ -336,7 +392,9 @@ class CCE:
         # shard the sample evenly; the (< nsh) remainder is dropped, which
         # FAISS-style subsampling tolerates by construction
         n = sample_ids.shape[0] - sample_ids.shape[0] % nsh
-        sample = self.materialize(params, buffers, sample_ids[:n])  # (c, n, dsub)
+        sample = self.materialize_sharded(
+            params, buffers, sample_ids[:n], mesh, axis_name=axis_name
+        )  # (c, n, dsub)
         w = None if sample_weights is None else sample_weights[:n].astype(jnp.float32)
 
         def per_shard(sample_local, w_local):
@@ -377,7 +435,7 @@ class CCE:
         centroids: jax.Array,
         mesh,
         *,
-        axis_name: str = "data",
+        axis_name: str = DATA_AXIS,
         chunk_size: int | None = None,
         use_kernel: bool | None = None,
     ) -> jax.Array:
@@ -386,15 +444,19 @@ class CCE:
         Each shard materializes and assigns d1/nsh ids (streamed in
         ``chunk_size`` slices like the serial pass) — the full-vocab pass
         is the transition's only O(d1) step, and it now scales with the
-        data axis instead of running replicated on every host.  The
+        data axis instead of running replicated on every host.  The OLD
+        pointer table enters as a SHARDED operand (``P(None, axis)``):
+        shard ``s`` owns the contiguous id slice ``[s*d1_loc,
+        (s+1)*d1_loc)``, and because ptr is indexed by id, its local tile
+        ``ptr[:, lo:hi]`` IS exactly the main rows of the ids the shard
+        assigns — no shard ever holds the full (c, d1) table.  The
         per-shard (c, d1/nsh) tiles come back through
-        ``out_specs=P(None, axis)``, i.e. the returned pointer is the full
-        (c, d1) table as ONE global array sharded over the id axis — XLA
-        inserts the all-gather lazily where a consumer (the training-step
-        ptr gather, ``assignment_counts``) needs rows from other shards.
-        The tail is padded with clamped ids (assignments are computed
-        row-wise, so the padded duplicates change nothing) and sliced off
-        after the pass."""
+        ``out_specs=P(None, axis)``, i.e. the returned pointer is the
+        full (c, d1) table as ONE global array sharded over the id axis
+        — XLA inserts the all-gather lazily where a consumer needs rows
+        from other shards.  The tail is padded with clamped ids and
+        edge-repeated ptr columns (assignments are computed row-wise, so
+        the padded duplicates change nothing) and sliced off after."""
         from jax.sharding import PartitionSpec as P
 
         from repro import compat
@@ -404,28 +466,39 @@ class CCE:
         nsh = mesh.shape[axis_name]
         d1_pad = ((self.d1 + nsh - 1) // nsh) * nsh
         ids = jnp.minimum(jnp.arange(d1_pad), self.d1 - 1)
+        ptr = self._ptr_padded(buffers["ptr"], d1_pad)
+        hs = jnp.asarray(buffers["hs"])
+        tabs = params["tables"]
 
-        def per_shard(ids_local):
+        def _chunk_assign(main_rows, ids_chunk):
+            main = jax.vmap(lambda t, r: t[r])(tabs[:, 0], main_rows)
+            helper = jax.vmap(lambda t, r: t[r])(
+                tabs[:, 1], self._helper_rows({"hs": hs}, ids_chunk)
+            )
+            emb = main + helper  # (c, n, dsub)
+            return jnp.stack(
+                [
+                    km.assign(emb[i], centroids[i], use_kernel=use_kernel)
+                    for i in range(self.c)
+                ]
+            )
+
+        def per_shard(ids_local, ptr_local):
             n_local = ids_local.shape[0]
             step = chunk_size if chunk_size and chunk_size < n_local else n_local
-            outs = []
-            for s in range(0, n_local, step):
-                emb = self.materialize(params, buffers, ids_local[s : s + step])
-                outs.append(
-                    jnp.stack(
-                        [
-                            km.assign(emb[i], centroids[i], use_kernel=use_kernel)
-                            for i in range(self.c)
-                        ]
-                    )
+            outs = [
+                _chunk_assign(
+                    ptr_local[:, s : s + step], ids_local[s : s + step]
                 )
+                for s in range(0, n_local, step)
+            ]
             return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
 
-        ptr = compat.shard_map(
-            per_shard, mesh=mesh, in_specs=P(axis_name),
+        ptr_new = compat.shard_map_unchecked(
+            per_shard, mesh=mesh, in_specs=(P(axis_name), P(None, axis_name)),
             out_specs=P(None, axis_name),
-        )(ids)
-        return ptr[:, : self.d1]
+        )(ids, ptr)
+        return ptr_new[:, : self.d1]
 
     def assignment_counts(self, buffers) -> jax.Array:
         """Per-cluster id counts (c, k) from the pointer table.  Depends
@@ -480,6 +553,90 @@ class CCE:
                 wcounts = wcounts + jax.vmap(seg)(jnp.tile(w[None], (self.c, 1)), idx)
         mean = sums / jnp.maximum(counts[..., None], 1.0)
         if id_weights is not None:
+            wmean = wsums / jnp.maximum(wcounts[..., None], 1e-12)
+            mean = jnp.where(wcounts[..., None] > 0, wmean, mean)
+        mean = mean.astype(mt.dtype)
+        return {"tables": jnp.stack([mean, jnp.zeros_like(mean)], axis=1)}
+
+    def remap_moments_sharded(self, moments, old_buffers, new_buffers, mesh, *,
+                              axis_name: str = DATA_AXIS, chunk_size=None,
+                              counts=None, id_weights=None):
+        """``remap_moments`` with the vocab sharded over ``axis_name``.
+
+        Both pointer tables enter as id-sharded operands (their local
+        tiles align with the shard's contiguous id slice, exactly like
+        ``assign_all_sharded``); each shard segment-sums the virtual
+        moments of its own ids into (c, k) accumulators and a psum
+        assembles the global sums — the (c, k, dsub) result is tiny, the
+        (c, d1) tables never leave their shards.  The tail padding is
+        MASKED (weight zero), not clamped: a clamped duplicate would be
+        COUNTED twice by the segment sums, unlike the row-wise
+        assignment pass where duplicates are harmless.  When ``counts``
+        is None the per-cluster id counts are accumulated in the same
+        pass (masked ones), matching ``assignment_counts`` exactly.  On
+        a 1-device axis this reproduces ``remap_moments`` bit-exactly
+        (same chunk boundaries, same addition order, identity psums)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        nsh = mesh.shape[axis_name]
+        d1_pad = ((self.d1 + nsh - 1) // nsh) * nsh
+        ids = jnp.minimum(jnp.arange(d1_pad), self.d1 - 1)
+        valid = (jnp.arange(d1_pad) < self.d1).astype(jnp.float32)
+        old_ptr = self._ptr_padded(old_buffers["ptr"], d1_pad)
+        new_ptr = self._ptr_padded(new_buffers["ptr"], d1_pad)
+        mt = jnp.asarray(moments["tables"])
+        old_hs = jnp.asarray(old_buffers["hs"])
+        weighted = id_weights is not None
+        w_pad = jnp.zeros(d1_pad, jnp.float32)
+        if weighted:
+            w_pad = w_pad.at[: self.d1].set(
+                jnp.asarray(id_weights).astype(jnp.float32)
+            )
+
+        def seg(vals, idx):
+            return jax.ops.segment_sum(vals, idx, num_segments=self.k)
+
+        def per_shard(ids_local, valid_local, w_local, old_local, new_local):
+            n_local = ids_local.shape[0]
+            step = chunk_size if chunk_size and chunk_size < n_local else n_local
+            sums = jnp.zeros((self.c, self.k, self.dsub), jnp.float32)
+            cnts = jnp.zeros((self.c, self.k), jnp.float32)
+            wsums = jnp.zeros_like(sums)
+            wcounts = jnp.zeros_like(cnts)
+            for s in range(0, n_local, step):
+                ids_c = ids_local[s : s + step]
+                v = valid_local[s : s + step]
+                main = jax.vmap(lambda t, r: t[r])(
+                    mt[:, 0], old_local[:, s : s + step]
+                )
+                helper = jax.vmap(lambda t, r: t[r])(
+                    mt[:, 1], self._helper_rows({"hs": old_hs}, ids_c)
+                )
+                per_id = (main + helper).astype(jnp.float32)
+                per_id = per_id * v[None, :, None]
+                idx = new_local[:, s : s + step]
+                sums = sums + jax.vmap(seg)(per_id, idx)
+                cnts = cnts + jax.vmap(seg)(jnp.tile(v[None], (self.c, 1)), idx)
+                if weighted:
+                    w = w_local[s : s + step] * v
+                    wsums = wsums + jax.vmap(seg)(per_id * w[None, :, None], idx)
+                    wcounts = wcounts + jax.vmap(seg)(
+                        jnp.tile(w[None], (self.c, 1)), idx
+                    )
+            return jax.lax.psum((sums, cnts, wsums, wcounts), axis_name)
+
+        sums, cnts, wsums, wcounts = compat.shard_map_unchecked(
+            per_shard, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(axis_name),
+                      P(None, axis_name), P(None, axis_name)),
+            out_specs=(P(), P(), P(), P()),
+        )(ids, valid, w_pad, old_ptr, new_ptr)
+        if counts is None:
+            counts = cnts
+        mean = sums / jnp.maximum(counts[..., None], 1.0)
+        if weighted:
             wmean = wsums / jnp.maximum(wcounts[..., None], 1e-12)
             mean = jnp.where(wcounts[..., None] > 0, wmean, mean)
         mean = mean.astype(mt.dtype)

@@ -95,6 +95,13 @@ class TableGroup:
     # natural dsubs) and stacked-table count (max member n_tables)
     dsub: int | None = None
     n_tables: int | None = None
+    #: round the codebook axis up to a multiple of this — the model-shard
+    #: count must divide k_pad so the slab splits evenly across devices.
+    #: Extra rows are zero, unreachable (every row index < the natural
+    #: k), and therefore zero-grad: they stay zero under training, so a
+    #: k_multiple=1 and a k_multiple=M layout are bit-interconvertible
+    #: (``grouped_layout_migration``).
+    k_multiple: int = 1
 
     @functools.cached_property
     def col_counts(self) -> tuple[int, ...]:
@@ -110,7 +117,8 @@ class TableGroup:
 
     @property
     def k_pad(self) -> int:
-        return max(t.fuse_spec.k for t in self.tables)
+        k = max(t.fuse_spec.k for t in self.tables)
+        return -(-k // self.k_multiple) * self.k_multiple
 
 
 # --- universal-slab plumbing (shared by device + host paths) ----------------
@@ -155,6 +163,28 @@ def _expand_rows(rows, s: int, n_tables: int, xp):
     return rows
 
 
+def bucket_rows(rows, k_loc: int, n_shards: int, xp):
+    """Route global row indices to their owning model shard.
+
+    ``rows`` int32 with the -1 no-op sentinel, any shape; shard ``s``
+    owns the contiguous codebook slice ``[s*k_loc, (s+1)*k_loc)``.
+    Returns a stacked (n_shards, *rows.shape) tensor where bucket ``s``
+    holds shard-LOCAL indices for the ids it owns and the -1 sentinel
+    everywhere else — each global row appears in exactly one bucket, so
+    summing the buckets' lookups reproduces the unsharded lookup
+    exactly.  ``xp`` is numpy (host translation) or jnp (in-step device
+    bucketing) — bit-identical, same twin pattern as ``_expand_rows``.
+    """
+    owner = rows // k_loc
+    return xp.stack(
+        [
+            xp.where((rows >= 0) & (owner == s), rows - s * k_loc, -1)
+            for s in range(n_shards)
+        ],
+        axis=0,
+    ).astype(np.int32)
+
+
 def _gcd_all(vals) -> int:
     return functools.reduce(math.gcd, vals)
 
@@ -167,7 +197,8 @@ class EmbeddingCollection:
     # --- construction ----------------------------------------------------
 
     @classmethod
-    def build(cls, tables: Sequence[Any], mode: str = "univ") -> "EmbeddingCollection":
+    def build(cls, tables: Sequence[Any], mode: str = "univ",
+              k_multiple: int = 1) -> "EmbeddingCollection":
         """``mode``:
         * "univ" (default) — universal fusion: every gather-sum table
           (``fuse_spec``) joins one supertable per dtype; ONE launch for
@@ -176,6 +207,12 @@ class EmbeddingCollection:
           + padded full-gather buckets); kept as the benchmark baseline.
         * "loop" — one loop group per feature (the pre-collection hot
           loop); benchmark baseline only.
+
+        ``k_multiple`` rounds every universal group's ``k_pad`` up so a
+        model mesh axis of that size divides the slab evenly (sharded
+        configs set it to the shard count; layouts with different
+        ``k_multiple`` stay bit-interconvertible, see ``TableGroup``).
+        Historical "group"/"loop" layouts ignore it by construction.
         """
         tables = tuple(tables)
         if mode == "loop":
@@ -214,6 +251,7 @@ class EmbeddingCollection:
                             tuple(tables[i] for i in members),
                             dsub=_gcd_all(s.dsub for s in specs),
                             n_tables=max(s.n_tables for s in specs),
+                            k_multiple=k_multiple,
                         )
                     )
         else:
@@ -474,8 +512,68 @@ class EmbeddingCollection:
         B = rows.shape[1]
         return jnp.moveaxis(pieces, 0, 1).reshape(B, -1)
 
+    def _univ_lookup_sharded(self, grp: TableGroup, group_params, rows,
+                             use_kernel, *, mesh, model_axis, batch_axes):
+        """Model-parallel universal lookup: the slab lives row(k)-sharded
+        over ``model_axis``, the batch lives sharded over ``batch_axes``
+        (which INCLUDE the model axis — every device works a distinct
+        batch slice), and ids route to their owning shard via all-to-all.
+
+        ``rows`` is (B, n_cols, T) global rows (bucketed on device) or
+        (B, M, n_cols, T) host-bucketed shard-local rows
+        (``HostTranslator(..., n_shards=M)``).  Per shard_map body:
+        bucket → all-to-all (each shard receives the ids it owns from
+        every peer's batch slice) → local kernel launch (non-owned slots
+        are the -1 sentinel: exact-zero partials) → all-to-all back →
+        sum over shards.  Both all-to-alls transpose to all-to-alls, so
+        the backward pass keeps the same routing and the slab cotangent
+        psums over the unmentioned batch axes automatically — forward
+        AND gradient are bit-identical to the unsharded launch (tested
+        in test_sharded_lookup.py).
+
+        ``check_rep`` is off (no replication rule for pallas_call on
+        jax 0.4.x) — out_specs are correct by the argument above.
+        """
+        from repro import compat
+
+        M = int(mesh.shape[model_axis])
+        k_loc = grp.k_pad // M
+        if k_loc * M != grp.k_pad:
+            raise ValueError(
+                f"k_pad {grp.k_pad} not divisible by model shards {M}; "
+                f"build the collection with k_multiple={M}"
+            )
+        T_g = grp.n_tables
+        n_cols = grp.n_cols
+        P = jax.sharding.PartitionSpec
+        pre_bucketed = rows.ndim == 4
+
+        def body(slab_loc, rows_loc):
+            # slab_loc (n_cols, T, k_loc, dsub); rows_loc (B_loc, n_cols, T)
+            # global rows or (B_loc, M, n_cols, T) shard-local buckets
+            if pre_bucketed:
+                b = jnp.moveaxis(rows_loc, 1, 0)  # (M, B_loc, n_cols, T)
+            else:
+                b = bucket_rows(rows_loc, k_loc, M, jnp)
+            recv = jax.lax.all_to_all(b, model_axis, split_axis=0, concat_axis=0)
+            B_loc = rows_loc.shape[0]
+            r = jnp.moveaxis(recv.reshape(M * B_loc, n_cols, T_g), 0, 1)
+            part = self._univ_lookup(grp, {"tables": slab_loc}, r, use_kernel)
+            part = part.reshape(M, B_loc, n_cols * grp.dsub)
+            back = jax.lax.all_to_all(part, model_axis, split_axis=0, concat_axis=0)
+            return back.sum(axis=0)  # (B_loc, n_cols*dsub)
+
+        rows_spec = P(batch_axes, *([None] * (rows.ndim - 1)))
+        return compat.shard_map_unchecked(
+            body,
+            mesh=mesh,
+            in_specs=(P(None, None, model_axis, None), rows_spec),
+            out_specs=P(batch_axes, None),
+        )(group_params["tables"], rows)
+
     def lookup_all(self, emb_params, emb_buffers, sparse, *, use_kernel=True,
-                   rows=None):
+                   rows=None, mesh=None, model_axis=None,
+                   batch_axes=None):
         """All features' embeddings in O(n_groups) heavy lookups — ONE on
         the compressed Criteo config.
 
@@ -490,21 +588,49 @@ class EmbeddingCollection:
         column slice directly and the device program never touches the
         (c, d1) pointer buffers.  ``sparse`` may then be None when every
         feature is universally fused.
+
+        ``mesh``/``model_axis``/``batch_axes`` switch universal groups to
+        the model-parallel path (``_univ_lookup_sharded``): the slab is
+        k-sharded over ``model_axis``, host rows may additionally arrive
+        pre-bucketed as (B, n_shards, rows_n_cols, rows_n_tables).  Axis
+        names are plain strings supplied by the caller (canonically
+        ``launch.mesh.DATA_AXIS``/``MODEL_AXIS`` — core stays
+        launch-agnostic).  The 1-device path is untouched.
         """
+        sharded = mesh is not None and model_axis is not None
+        if not sharded and rows is not None and rows.ndim == 4:
+            raise ValueError("pre-bucketed 4-d rows require a model mesh")
         outs = [None] * self.n_features
         col_off = 0
         for g, grp in enumerate(self.groups):
             if grp.kind == "univ":
-                if rows is not None:
+                if sharded:
+                    if rows is None:
+                        raise NotImplementedError(
+                            "sharded lookup needs host-translated rows "
+                            "(the device program must not gather ptr)"
+                        )
+                    sl = (slice(None), slice(col_off, col_off + grp.n_cols),
+                          slice(None, grp.n_tables))
+                    grows = rows[(slice(None), slice(None)) + sl[1:]] \
+                        if rows.ndim == 4 else rows[sl]
+                    col_off += grp.n_cols
+                    flat = self._univ_lookup_sharded(
+                        grp, emb_params[g], grows, use_kernel,
+                        mesh=mesh, model_axis=model_axis,
+                        batch_axes=batch_axes,
+                    )
+                elif rows is not None:
                     grows = jnp.moveaxis(
                         rows[:, col_off : col_off + grp.n_cols, : grp.n_tables],
                         0, 1,
                     )  # (n_cols, B, T)
                     col_off += grp.n_cols
+                    flat = self._univ_lookup(grp, emb_params[g], grows, use_kernel)
                 else:
                     ids = jnp.take(sparse, jnp.asarray(grp.features), axis=1)
                     grows = self.group_rows(grp, emb_buffers[g], ids)
-                flat = self._univ_lookup(grp, emb_params[g], grows, use_kernel)
+                    flat = self._univ_lookup(grp, emb_params[g], grows, use_kernel)
                 off = 0
                 for f_local, i in enumerate(grp.features):
                     n = grp.col_counts[f_local]

@@ -33,14 +33,32 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.collection import EmbeddingCollection, _expand_rows
+from repro.core.collection import EmbeddingCollection, _expand_rows, bucket_rows
 
 
 class HostTranslator:
-    """ids -> supertable rows on host, bit-exact with the device path."""
+    """ids -> supertable rows on host, bit-exact with the device path.
 
-    def __init__(self, collection: EmbeddingCollection, emb_buffers=None):
+    With ``n_shards=M`` the translator additionally plays the ps-lite
+    worker-side id-router role: each universal group's rows are bucketed
+    by owning model shard (shard ``s`` owns codebook rows
+    ``[s*k_pad/M, (s+1)*k_pad/M)``) and ``rows()`` emits shard-LOCAL
+    indices (B, M, rows_n_cols, rows_n_tables) — the device program then
+    skips the bucketing arithmetic and goes straight to all-to-all
+    (``EmbeddingCollection._univ_lookup_sharded``)."""
+
+    def __init__(self, collection: EmbeddingCollection, emb_buffers=None,
+                 *, n_shards: int = 1):
         self.collection = collection
+        self.n_shards = int(n_shards)
+        for g in collection.univ_groups:
+            grp = collection.groups[g]
+            if grp.k_pad % self.n_shards:
+                raise ValueError(
+                    f"group {g}: k_pad {grp.k_pad} not divisible by "
+                    f"n_shards {n_shards}; build the collection with "
+                    f"k_multiple={n_shards}"
+                )
         self._buffers = None
         if emb_buffers is not None:
             self.update(emb_buffers)
@@ -67,10 +85,14 @@ class HostTranslator:
     def rows(self, sparse: np.ndarray) -> np.ndarray:
         """(B, n_features) raw ids -> (B, rows_n_cols, rows_n_tables)
         int32 supertable rows (universal groups concatenated along the
-        column axis; narrower groups' extra sub-table slots are -1)."""
+        column axis; narrower groups' extra sub-table slots are -1).
+        With ``n_shards=M`` > 1 the result gains a shard-bucket axis:
+        (B, M, rows_n_cols, rows_n_tables) shard-local indices, each
+        group bucketed by its own ``k_pad / M``."""
         if self._buffers is None:
             raise RuntimeError("HostTranslator.update(emb_buffers) first")
         coll = self.collection
+        M = self.n_shards
         sparse = np.asarray(sparse)
         T = coll.rows_n_tables
         blocks = []
@@ -92,8 +114,14 @@ class HostTranslator:
                 pad = np.full(grows.shape[:-1] + (T - grows.shape[-1],), -1,
                               np.int32)
                 grows = np.concatenate([grows, pad], axis=-1)
+            if M > 1:
+                grows = bucket_rows(grows, grp.k_pad // M, M, np)
+                # (M, n_cols, B, T)
             blocks.append(grows)
-        return np.moveaxis(np.concatenate(blocks, axis=0), 0, 1).astype(np.int32)
+        rows = np.concatenate(blocks, axis=-3)  # col axis, with/without M
+        if M > 1:
+            return np.moveaxis(rows, (0, 1, 2), (1, 2, 0)).astype(np.int32)
+        return np.moveaxis(rows, 0, 1).astype(np.int32)
 
     def __call__(self, batch: dict, *, drop_sparse: bool = False) -> dict:
         """Translate one batch dict: adds ``rows``; ``drop_sparse=True``

@@ -12,7 +12,13 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import shapes as shp
-from repro.launch.mesh import batch_axes as mesh_batch_axes
+from repro.launch.mesh import (
+    MODEL_AXIS,
+    all_batch_axes,
+    batch_axes as mesh_batch_axes,
+    model_axis,
+    ptr_partition_spec,
+)
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import adamw, cosine_schedule
@@ -103,6 +109,174 @@ def build_train_step(cfg: ModelConfig, mesh, shape_name: str = "train_4k"):
         donate_argnums=(0,),
     )
     return jitted, (state_shape, batch_sds), (state_shardings, batch_shardings)
+
+
+# --- DLRM: the model-parallel supertable step (ROADMAP item 1) ---------------
+
+
+def _replicated(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def dlrm_abstract_state(cfg, optimizer):
+    """eval_shape the DLRM TrainState — zero allocation."""
+    from repro.models import dlrm
+
+    def mk():
+        params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+        dyn, _ = split_buffers(buffers)
+        return TrainState(
+            params=params, opt=optimizer.init(params), ebuf=dyn,
+            step=jnp.zeros((), jnp.int32), err=None,
+        )
+
+    return jax.eval_shape(mk)
+
+
+def dlrm_state_specs(cfg, state_shape, *, model=MODEL_AXIS, n_shards=None):
+    """PartitionSpec tree for the model-parallel DLRM TrainState.
+
+    The sharding layout (DESIGN.md §9): every universal supertable
+    ``(C, T, k_pad, dsub)`` splits its CODEBOOK axis over ``model``
+    (``cfg.emb_k_multiple`` makes k_pad divide evenly), the adjacent
+    ``ptr`` pointer buffers split per ``mesh.ptr_partition_spec`` (id
+    axis when the vocab divides, column axis for ragged vocabs), and the
+    optimizer moments mirror their params exactly — so no replica holds
+    the full slab, the full moments, or the full pointer table.  MLPs,
+    the tiny hash seeds (``hs``), the ``epoch`` counters, and the step
+    counter stay replicated (all far below the audit's replication
+    threshold).  ``n_shards`` is the model-axis size the specs will run
+    under (needed for the divisibility choice; defaults to assuming the
+    id axis divides)."""
+    coll = cfg.collection
+    univ = set(coll.univ_groups)
+    slab = P(None, None, model, None)
+
+    emb_p = [
+        {"tables": slab} if g in univ
+        else _replicated(state_shape.params["emb"][g])
+        for g in range(len(coll.groups))
+    ]
+    pspecs = {
+        k: (emb_p if k == "emb" else _replicated(v))
+        for k, v in state_shape.params.items()
+    }
+
+    def feat_spec(fb):
+        if not isinstance(fb, dict):
+            return _replicated(fb)
+        return {
+            k: (ptr_partition_spec(*v.shape, n_shards, model)
+                if k == "ptr" and v is not None and n_shards
+                else P(None, model) if k == "ptr" and v is not None
+                else _replicated(v))
+            for k, v in fb.items()
+        }
+
+    ebuf_emb = [
+        [feat_spec(fb) for fb in state_shape.ebuf["emb"][g]] if g in univ
+        else _replicated(state_shape.ebuf["emb"][g])
+        for g in range(len(coll.groups))
+    ]
+    ebuf_specs = {
+        k: (ebuf_emb if k == "emb" else _replicated(v))
+        for k, v in state_shape.ebuf.items()
+    }
+    # moments mirror params (sgd-momentum m / adam m,v); scalar slots
+    # (adam's t) replicate
+    ospecs = {
+        slot: (pspecs if slot in ("m", "v") else P())
+        for slot in state_shape.opt
+    }
+    return TrainState(
+        params=pspecs, opt=ospecs, ebuf=ebuf_specs, step=P(), err=None,
+    )
+
+
+def dlrm_batch_struct(cfg, batch_size: int, *, accum: int = 1,
+                      n_shards: int = 1, with_sparse: bool = False):
+    """ShapeDtypeStructs of the sharded trainer's batch: host-translated
+    (pre-bucketed when ``n_shards`` > 1) rows + dense + label, leaves
+    shaped (accum, micro, ...).  ``with_sparse`` keeps the raw ids in the
+    device batch (the host frequency tracker reads them from the SAME
+    batch dict; XLA prunes the unused device copy)."""
+    coll = cfg.collection
+    micro = batch_size // accum
+    rows_shape = (micro, coll.rows_n_cols, coll.rows_n_tables)
+    if n_shards > 1:
+        rows_shape = (micro, n_shards) + rows_shape[1:]
+    batch = {
+        "dense": jax.ShapeDtypeStruct((micro, cfg.n_dense), jnp.float32),
+        "label": jax.ShapeDtypeStruct((micro,), jnp.float32),
+        "rows": jax.ShapeDtypeStruct(rows_shape, jnp.int32),
+    }
+    if with_sparse:
+        batch["sparse"] = jax.ShapeDtypeStruct(
+            (micro, cfg.n_sparse), jnp.int32
+        )
+    return {
+        k: jax.ShapeDtypeStruct((accum, *v.shape), v.dtype)
+        for k, v in batch.items()
+    }
+
+
+def build_dlrm_train_step(cfg, mesh, *, batch_size: int, accum: int = 1,
+                          optimizer=None, lr_fn=None, static_buffers=None,
+                          with_sparse: bool = False, donate: bool = True):
+    """The donated model-parallel DLRM step for a (data, model) mesh.
+
+    Returns ``(jitted_step, (state_shape, batch_struct),
+    (state_shardings, batch_shardings))``: state enters AND leaves on the
+    sharded layout (slab + moments k-sharded, ptr id-sharded — see
+    ``dlrm_state_specs``), batch leaves shard their batch dim over every
+    device (``all_batch_axes``), and the supertable lookup routes ids by
+    all-to-all inside the step (``EmbeddingCollection._univ_lookup_sharded``).
+    On a mesh without a nontrivial model axis this degrades to the plain
+    data-parallel step — same code path, no sharded lookup."""
+    from repro.models import dlrm
+    from repro.optim import sgd
+
+    if optimizer is None:
+        optimizer = sgd(momentum=0.9)
+    if lr_fn is None:
+        def lr_fn(step):
+            return jnp.float32(1e-3)
+    if static_buffers is None:
+        _, buffers = jax.eval_shape(
+            lambda: dlrm.init(jax.random.PRNGKey(0), cfg)
+        )
+        _, static_buffers = split_buffers(buffers)
+    m_ax = model_axis(mesh)
+    baxes = all_batch_axes(mesh)
+    n_shards = mesh.shape.get(MODEL_AXIS, 1)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(
+            p, b, cfg, mb, mesh=mesh if m_ax else None,
+            model_axis=m_ax, batch_axes=baxes if m_ax else None,
+        ), {}
+
+    step_fn = make_train_step(
+        loss_fn, optimizer, lr_fn, static_buffers, accum=accum,
+    )
+    state_shape = dlrm_abstract_state(cfg, optimizer)
+    sspecs = dlrm_state_specs(cfg, state_shape, n_shards=n_shards)
+    batch_struct = dlrm_batch_struct(
+        cfg, batch_size, accum=accum, n_shards=n_shards,
+        with_sparse=with_sparse,
+    )
+    bspec = jax.tree.map(
+        lambda s: P(None, baxes, *([None] * (s.ndim - 2))), batch_struct
+    )
+    state_shardings = _ns(mesh, sspecs)
+    batch_shardings = _ns(mesh, bspec)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, (state_shape, batch_struct), (state_shardings, batch_shardings)
 
 
 def _maybe_dp(n: int, baxes, n_dp: int):

@@ -85,14 +85,82 @@ def build_lm_trainer(cfg, args):
     )
 
 
-def build_dlrm_trainer(args):
-    from repro.configs import dlrm_criteo
+def build_dlrm_sharded_trainer(cfg, args, *, model: int, data_shards: int = 1):
+    """The model-parallel DLRM trainer (ROADMAP item 1): supertable +
+    optimizer moments codebook-sharded over the model mesh axis, ptr
+    id-sharded the same way, host-translated rows pre-bucketed per shard,
+    and the clustering transition running its O(d1) passes sharded over
+    the same axis — no replica ever holds the full slab, full moments, or
+    full pointer table (asserted by the ``dlrm_criteo_sharded`` audit's
+    ``no-replicated-param`` rule at error severity)."""
+    from repro.data.translate import HostTranslator, translate_batches
+    from repro.launch.mesh import MODEL_AXIS, make_host_mesh
+    from repro.launch.steps import build_dlrm_train_step
 
-    cfg = dlrm_criteo.reduced(emb_method=args.emb, cap=args.emb_cap)
+    mesh = make_host_mesh(data=data_shards, model=model)
     key = jax.random.PRNGKey(args.seed)
     params, buffers = dlrm.init(key, cfg)
     dyn, static = split_buffers(buffers)
-    optimizer = sgd(momentum=0.0)  # the paper's choice
+    optimizer = sgd(momentum=args.momentum)
+
+    def lr_fn(step):
+        return jnp.float32(args.lr)
+
+    track = args.emb == "cce"
+    step, _, (state_shardings, _) = build_dlrm_train_step(
+        cfg, mesh, batch_size=args.batch, accum=args.accum,
+        optimizer=optimizer, lr_fn=lr_fn, static_buffers=static,
+        with_sparse=track,  # the host tracker reads raw ids off the batch
+    )
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s),
+        init_state(params, optimizer, dyn), state_shardings,
+    )
+    translator = HostTranslator(cfg.collection, buffers["emb"], n_shards=model)
+    data = translate_batches(
+        clickstream_batches(
+            ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=args.seed),
+            args.batch,
+        ),
+        translator,
+    )
+    tracker = IdFrequencyTracker(cfg.vocab_sizes) if track else None
+
+    def cluster_fn(key, params, buffers, opt):
+        return dlrm.cluster_tables(
+            key, params, buffers, cfg, opt, id_counts=tracker.counts,
+            mesh=mesh, shard_axis=MODEL_AXIS,
+        )
+
+    return Trainer(
+        step, state, static, data,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        cluster_fn=cluster_fn if track else None,
+        cluster_every=args.cluster_every, id_tracker=tracker,
+        translator=translator, accum=args.accum,
+        failures=FailureInjector(tuple(args.fail_at)),
+        seed=args.seed,
+        migrations=dlrm.checkpoint_migrations(cfg),
+        state_shardings=state_shardings,
+    )
+
+
+def build_dlrm_trainer(args):
+    from repro.configs import dlrm_criteo
+
+    model = max(1, getattr(args, "model_shards", 1))
+    cfg = dlrm_criteo.reduced(
+        emb_method=args.emb, cap=args.emb_cap, k_multiple=model,
+    )
+    if model > 1:
+        return build_dlrm_sharded_trainer(
+            cfg, args, model=model,
+            data_shards=max(1, getattr(args, "data_shards", 1)),
+        )
+    key = jax.random.PRNGKey(args.seed)
+    params, buffers = dlrm.init(key, cfg)
+    dyn, static = split_buffers(buffers)
+    optimizer = sgd(momentum=args.momentum)  # paper default: plain SGD
     def lr_fn(step):
         return jnp.float32(args.lr)
 
@@ -134,7 +202,12 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--warmup", type=int, default=10)
+    # model-parallel DLRM: shard the supertable over this many devices
+    # (the mesh is (data_shards, model_shards); 1 = the plain 1-device path)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--data-shards", type=int, default=1)
     ap.add_argument("--emb", default="cce")
     ap.add_argument("--emb-cap", type=int, default=512)
     ap.add_argument("--cluster-every", type=int, default=0)

@@ -68,6 +68,12 @@ class DLRMConfig:
     # "loop" (per-feature lookups).  The non-default modes exist as
     # benchmark baselines (bench_kernels --fuse) and escape hatches.
     emb_fuse: str = "univ"
+    # model-parallel shard count the supertable codebook axis must divide
+    # by: sharded configs set it to the model mesh size (k_pad rounds up;
+    # the pad rows are unreachable and stay zero, so layouts with
+    # different emb_k_multiple checkpoint-restore into each other
+    # bit-exactly — see checkpoint_migrations)
+    emb_k_multiple: int = 1
     dtype: Any = jnp.float32
 
     @property
@@ -93,6 +99,7 @@ class DLRMConfig:
         return EmbeddingCollection.build(
             tuple(self._build_table(i) for i in range(self.n_sparse)),
             mode=self.emb_fuse,
+            k_multiple=self.emb_k_multiple,
         )
 
     def table(self, i: int):
@@ -140,13 +147,21 @@ def init(key, cfg: DLRMConfig):
     return params, buffers
 
 
-def forward(params, buffers, cfg: DLRMConfig, batch):
+def forward(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,
+            model_axis=None, batch_axes=None):
     """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits.
 
     A host-translating input pipeline (``data.translate``, DESIGN.md §4)
     ships ``batch["rows"]`` — pre-translated codebook row indices —
     instead of (or alongside) ``batch["sparse"]``: the device program
-    then never gathers the (c, d1) pointer tables."""
+    then never gathers the (c, d1) pointer tables.
+
+    ``mesh``/``model_axis``/``batch_axes`` switch the supertable lookup
+    to the model-parallel shard_map path (the slab k-sharded over
+    ``model_axis``, ids routed by all-to-all; ``batch_axes`` is the
+    FULL batch layout including the model axis —
+    ``launch.mesh.all_batch_axes``).  MLPs stay data-parallel under
+    jit's normal sharding propagation."""
     dense = batch["dense"].astype(cfg.dtype)
     x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
     use_kernel = cfg.emb_use_kernel
@@ -155,6 +170,7 @@ def forward(params, buffers, cfg: DLRMConfig, batch):
     emb = cfg.collection.lookup_all(
         params["emb"], buffers["emb"], batch.get("sparse"),
         use_kernel=use_kernel, rows=batch.get("rows"),
+        mesh=mesh, model_axis=model_axis, batch_axes=batch_axes,
     )  # (B, n_sparse, emb_dim) in O(n_groups) heavy lookups (ONE on Criteo)
     V = jnp.concatenate([x0[:, None, :], emb], axis=1)  # (B, 27, emb_dim)
     # pairwise dot interactions (upper triangle, no self)
@@ -164,8 +180,10 @@ def forward(params, buffers, cfg: DLRMConfig, batch):
     return _apply_mlp(params["top"], feats)[:, 0]
 
 
-def bce_loss(params, buffers, cfg: DLRMConfig, batch):
-    logits = forward(params, buffers, cfg, batch)
+def bce_loss(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,
+             model_axis=None, batch_axes=None):
+    logits = forward(params, buffers, cfg, batch, mesh=mesh,
+                     model_axis=model_axis, batch_axes=batch_axes)
     y = batch["label"].astype(jnp.float32)
     lg = logits.astype(jnp.float32)
     return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
@@ -175,7 +193,8 @@ def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
                    id_counts=None, policy: str | None = None,
                    chunk_size: int | None = None,
                    use_kernel: bool | None = None,
-                   max_points_per_centroid: int = 256):
+                   max_points_per_centroid: int = 256,
+                   mesh=None, shard_axis: str | None = None):
     """Run the CCE clustering transition on every CCE table (the training
     callback — Alg. 3 `Cluster`), group-wise through the collection.
 
@@ -203,6 +222,7 @@ def cluster_tables(key, params, buffers, cfg: DLRMConfig, opt=None, *,
         cfg.collection, key, params["emb"], buffers["emb"],
         id_counts=id_counts, policy=policy, chunk_size=chunk_size,
         use_kernel=use_kernel, max_points_per_centroid=max_points_per_centroid,
+        mesh=mesh, shard_axis=shard_axis,
     )
     new_params = dict(params, emb=new_emb_p)
     new_buffers = dict(buffers, emb=new_emb_b)
@@ -241,12 +261,24 @@ def make_id_tracker(cfg: DLRMConfig, stream=None, *, key: str = "sparse"):
     )
 
 
+#: ``k_multiple`` layouts every DLRM trainer can restore checkpoints
+#: FROM (and write checkpoints readable BY): 1 covers the 1-device
+#: trainer, the powers of two cover the common model-shard counts.  A
+#: writer with a k_multiple outside this set needs its own migration.
+KNOWN_K_MULTIPLES = (1, 2, 4, 8)
+
+
 def checkpoint_migrations(cfg: DLRMConfig):
     """``Trainer(migrations=...)`` entries for every older emb layout:
-    the pre-collection per-feature layout AND the pre-universal grouped
-    layout (per-signature CCE slab + full buckets) both restore bit-exact
-    into today's supertables (params, optimizer moments, buffers, error
-    feedback)."""
+    the pre-collection per-feature layout, the pre-universal grouped
+    layout (per-signature CCE slab + full buckets), and every
+    ``KNOWN_K_MULTIPLES`` sharded-padding variant of the universal layout
+    — all restore bit-exact into this config's supertables (params,
+    optimizer moments, buffers, error feedback).  The k_multiple
+    migrations are what lets a model-sharded trainer's checkpoint restore
+    into a 1-device trainer and vice versa: the extra pad rows are
+    unreachable and provably zero, so dropping/adding them through the
+    per-feature view loses nothing."""
     migrations = [legacy_layout_migration(cfg.collection)]
     grouped = EmbeddingCollection.build(cfg.collection.tables, mode="group")
     same_layout = tuple((g.kind, g.features) for g in grouped.groups) == tuple(
@@ -256,4 +288,19 @@ def checkpoint_migrations(cfg: DLRMConfig):
         migrations.append(
             grouped_layout_migration(cfg.collection, grouped)
         )
+
+    def k_pads(coll):
+        return tuple(
+            coll.groups[g].k_pad for g in coll.univ_groups
+        )
+
+    for m in KNOWN_K_MULTIPLES:
+        if m == cfg.emb_k_multiple:
+            continue
+        other = EmbeddingCollection.build(
+            cfg.collection.tables, mode=cfg.emb_fuse, k_multiple=m,
+        )
+        if k_pads(other) == k_pads(cfg.collection):
+            continue  # same padded layout — nothing to migrate
+        migrations.append(grouped_layout_migration(cfg.collection, other))
     return migrations

@@ -11,8 +11,11 @@ a moment transform through the optimizer-state tree, policy-selected:
 
   * ``"remap"`` — per-row moments follow the cluster assignments (mean of
     the merged rows' moments, zeros for the fresh helper table — see
-    ``CCE.remap_moments``), the moment-space analog of setting the main
-    table to the centroids.
+    ``CCE.remap_moments``, or ``CCE.remap_moments_sharded`` when the
+    transition runs over a mesh: the O(d1) averaging pass then shards its
+    id ranges and pointer operands over the mesh axis and psums the
+    per-cluster sums, bit-identical on a 1-device axis), the moment-space
+    analog of setting the main table to the centroids.
   * ``"reset"`` — zero the transitioned tables' moments (fresh start).
   * ``"keep"`` — leave the state untouched (the pre-fix behavior, kept
     for ablation).
@@ -20,6 +23,12 @@ a moment transform through the optimizer-state tree, policy-selected:
 Only per-row moment slots are touched; scalar slots (the Adam step count
 ``t``) pass through so bias correction stays continuous across the
 transition and checkpoint resume stays restart-exact.
+
+Under a model-sharded trainer (launch.steps.dlrm_state_specs) the moment
+slabs enter sharded exactly like their params; the eager transition's
+outputs land wherever jax puts them and the Trainer device_puts the whole
+state back onto the step's layout (``Trainer._place``) before the next
+donated step — this module stays layout-agnostic.
 """
 from __future__ import annotations
 

@@ -298,6 +298,7 @@ class Trainer:
         failures: FailureInjector | None = None,
         seed: int = 0,
         migrations=(),
+        state_shardings=None,
     ):
         self.train_step = train_step
         self.state = state
@@ -347,7 +348,21 @@ class Trainer:
         self.migrations = tuple(migrations) + (
             tuple(tracker_migrations()) if tracker_migrations else ()
         )
+        # a TrainState-shaped tree of jax.sharding.Sharding for the
+        # sharded trainer (launch.steps.dlrm_state_shardings): state
+        # produced OUTSIDE the donated jitted step — the eager clustering
+        # transition, a checkpoint restore — is device_put back onto the
+        # step's layout before the next step runs, so donation never has
+        # to reshard and no replica silently ends up with the full slab
+        self.state_shardings = state_shardings
         self.history: list[dict] = []
+
+    def _place(self, state: TrainState) -> TrainState:
+        if self.state_shardings is None:
+            return state
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, self.state_shardings
+        )
 
     def _reshape_accum(self, batch):
         def r(x):
@@ -424,9 +439,9 @@ class Trainer:
                     init_error_feedback(params)
                     if self.state.err is not None else None
                 )
-                self.state = self.state._replace(
+                self.state = self._place(self.state._replace(
                     params=params, ebuf=dyn, opt=opt, err=err
-                )
+                ))
                 self.clusters_done += 1
                 if self.translator is not None:  # ptr/hs mirrors went stale
                     self.translator.update(buffers["emb"])
@@ -560,7 +575,7 @@ class Trainer:
                 if with_counts is not None:
                     candidates.append((with_counts, to_new))
         step, tree, _ = load_checkpoint(self.ckpt.directory, migrations=candidates)
-        self.state = tree["state"]
+        self.state = self._place(tree["state"])
         self.clusters_done = int(tree.get("clusters_done", 0))
         if self.id_tracker is not None:
             if "id_counts" in tree:

@@ -56,6 +56,8 @@ def transition_table(
     chunk_size: int | None = None,
     use_kernel: bool | None = None,
     max_points_per_centroid: int = 256,
+    mesh=None,
+    shard_axis: str | None = None,
 ):
     """Returns ``(new_params, new_buffers, update_moments)`` for one CCE
     table.  ``counts`` is the table's observed id histogram — a dense
@@ -65,7 +67,15 @@ def transition_table(
     not a with-replacement approximation of it) and the moment remap
     averages with the same weights.  None or all-zero falls back to
     uniform subsampling.  ``update_moments(moment_subtree)`` remaps/
-    resets/keeps that table's per-row optimizer moments per ``policy``."""
+    resets/keeps that table's per-row optimizer moments per ``policy``.
+
+    ``mesh``/``shard_axis`` route every O(d1) phase through the sharded
+    implementations (``cluster_sharded`` / ``remap_moments_sharded``) —
+    id ranges and pointer tables shard over ``shard_axis``, so the
+    transition never assembles a full (c, d1) ptr on one device.  On a
+    1-device axis the sharded paths are bit-identical to the serial
+    ones (same key schedule), so the clustering trajectory does not
+    depend on the mesh."""
     sample_ids = sample_weights = id_weights = None
     if counts is not None:
         seed = int(
@@ -78,14 +88,24 @@ def transition_table(
             sample_ids = jnp.asarray(drawn[0])
             sample_weights = jnp.asarray(drawn[1], jnp.float32)
             id_weights = jnp.asarray(_dense_weights(counts, table.d1), jnp.float32)
-    new_params, new_buffers = table.cluster(
-        key, params, buffers,
-        sample_ids=sample_ids, sample_weights=sample_weights,
-        chunk_size=chunk_size, use_kernel=use_kernel,
-        max_points_per_centroid=max_points_per_centroid,
-    )
+    sharded = mesh is not None and shard_axis is not None
+    if sharded:
+        new_params, new_buffers = table.cluster_sharded(
+            key, params, buffers, mesh, axis_name=shard_axis,
+            sample_ids=sample_ids, sample_weights=sample_weights,
+            chunk_size=chunk_size, use_kernel=use_kernel,
+            max_points_per_centroid=max_points_per_centroid,
+        )
+    else:
+        new_params, new_buffers = table.cluster(
+            key, params, buffers,
+            sample_ids=sample_ids, sample_weights=sample_weights,
+            chunk_size=chunk_size, use_kernel=use_kernel,
+            max_points_per_centroid=max_points_per_centroid,
+        )
     cluster_counts = (
-        table.assignment_counts(new_buffers) if policy == "remap" else None
+        table.assignment_counts(new_buffers)
+        if policy == "remap" and not sharded else None
     )
 
     def update_moments(moments):
@@ -93,6 +113,13 @@ def transition_table(
             return moments
         if policy == "reset":
             return zeros_like_moments(moments)
+        if sharded:
+            # counts accumulate inside the sharded pass (masked ones) —
+            # no full-ptr bincount on one device
+            return table.remap_moments_sharded(
+                moments, buffers, new_buffers, mesh, axis_name=shard_axis,
+                chunk_size=chunk_size, id_weights=id_weights,
+            )
         return table.remap_moments(
             moments, buffers, new_buffers,
             chunk_size=chunk_size, counts=cluster_counts, id_weights=id_weights,
@@ -112,6 +139,8 @@ def transition_collection(
     chunk_size: int | None = None,
     use_kernel: bool | None = None,
     max_points_per_centroid: int = 256,
+    mesh=None,
+    shard_axis: str | None = None,
 ):
     """Transition every CCE table behind an ``EmbeddingCollection``.
 
@@ -148,6 +177,7 @@ def transition_collection(
                 counts=id_counts[i] if id_counts is not None else None,
                 policy=policy, chunk_size=chunk_size, use_kernel=use_kernel,
                 max_points_per_centroid=max_points_per_centroid,
+                mesh=mesh, shard_axis=shard_axis,
             )
         new_p[g] = coll.stack_group_params(grp, per_p)
         new_b[g] = per_b

@@ -415,12 +415,16 @@ def test_sharded_transition_audit_on_forced_mesh():
     out = json.loads(res.stdout.strip().splitlines()[-1])
     assert out["ok"], out["findings"]
     profs = out["profiles"]
-    assert set(profs) == {"cluster_sharded", "assign_all_sharded"}
+    assert set(profs) == {
+        "cluster_sharded", "assign_all_sharded", "train_step_sharded",
+    }
     for prof in profs.values():
         assert prof["num_partitions"] == 4
         assert prof["dcn_bytes"] == 0.0
         assert set(prof["collectives"]) <= {
-            "all-reduce", "all-gather", "collective-permute",
+            "all-to-all", "all-reduce", "all-gather", "collective-permute",
         }
     # the distributed k-means really does psum
     assert profs["cluster_sharded"]["collectives"].get("all-reduce", 0) > 0
+    # the model-parallel step really does route ids shard-to-shard
+    assert profs["train_step_sharded"]["collectives"].get("all-to-all", 0) > 0

@@ -1,0 +1,414 @@
+"""Pod-scale model parallelism (ROADMAP item 1): the sharded supertable.
+
+Four contracts, each pinned by construction rather than tolerance:
+
+  * routing — ``bucket_rows`` partitions global row indices exactly once
+    across shards (host/device twins bit-identical), and the
+    ``HostTranslator``'s pre-bucketed emission reconstructs the unsharded
+    rows tensor exactly;
+  * bit-exactness — the all-to-all sharded lookup/forward equals the
+    1-device program BIT-exactly (one-hot semantics: each column picks
+    one row, so partial sums have at most one nonzero term);
+  * memory — no replica holds the full slab, full moments, or full
+    pointer table (asserted on live shards AND on the compiled step's
+    per-device entry parameters via ``hlo_cost.liveness``);
+  * portability — checkpoints cross ``emb_k_multiple`` layouts (sharded
+    writer -> 1-device reader and back) bit-exactly through
+    ``dlrm.checkpoint_migrations``.
+
+Multi-device cases run in subprocesses that force 4 host devices before
+jax initializes, so they exercise real 4-way meshes under the plain
+tier-1 lane too.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import dlrm_criteo
+from repro.core.collection import bucket_rows
+from repro.data import ClickstreamConfig, clickstream_batches
+from repro.data.translate import HostTranslator
+from repro.launch.mesh import MODEL_AXIS, ptr_partition_spec
+from repro.models import dlrm
+from repro.optim import sgd
+from repro.train.loop import Trainer, init_state, make_train_step, split_buffers
+
+
+# --- routing: the one greppable at-rest ptr layout policy --------------------
+
+
+def test_ptr_partition_spec_policy():
+    # 1 shard: nothing to split
+    assert ptr_partition_spec(4, 100, 1) == P()
+    # vocab divides: id-sharded (the transition kernels' compute layout)
+    assert ptr_partition_spec(4, 100, 4) == P(None, MODEL_AXIS)
+    assert ptr_partition_spec(4, 8, 2, "data") == P(None, "data")
+    # ragged vocab (Criteo's 10_131_227 is odd), columns divide: c-sharded
+    assert ptr_partition_spec(4, 101, 4) == P(MODEL_AXIS, None)
+    # nothing divides: replicated is the only legal layout
+    assert ptr_partition_spec(3, 101, 4) == P()
+
+
+def test_bucket_rows_partitions_exactly_once_and_twins_match():
+    rng = np.random.default_rng(0)
+    k_pad, n_shards = 16, 4
+    k_loc = k_pad // n_shards
+    rows = rng.integers(-1, k_pad, size=(5, 3, 7)).astype(np.int32)
+    b_np = bucket_rows(rows, k_loc, n_shards, np)
+    b_jnp = np.asarray(bucket_rows(jnp.asarray(rows), k_loc, n_shards, jnp))
+    np.testing.assert_array_equal(b_np, b_jnp)  # host/device twins
+
+    assert b_np.shape == (n_shards,) + rows.shape
+    hit = b_np >= 0
+    # every valid global row lands in exactly ONE bucket, sentinel in none
+    np.testing.assert_array_equal(hit.sum(axis=0), (rows >= 0).astype(int))
+    # and the owning bucket holds the shard-LOCAL index
+    recon = np.full_like(rows, -1)
+    for s in range(n_shards):
+        recon = np.where(hit[s], b_np[s] + s * k_loc, recon)
+    np.testing.assert_array_equal(recon, rows)
+
+
+def test_host_translator_sharded_rows_reconstruct_unsharded():
+    M = 4
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512, k_multiple=M)
+    coll = cfg.collection
+    _, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    tr_flat = HostTranslator(coll, buffers["emb"])
+    tr_shard = HostTranslator(coll, buffers["emb"], n_shards=M)
+
+    batch = next(clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0), 32
+    ))
+    flat = tr_flat.rows(batch["sparse"])          # (B, n_cols, T)
+    shard = tr_shard.rows(batch["sparse"])        # (B, M, n_cols, T)
+    assert shard.shape == (flat.shape[0], M) + flat.shape[1:]
+
+    # reconstruct global indices: each group buckets by its own k_pad/M
+    recon = np.full_like(flat, -1)
+    col = 0
+    for g in coll.univ_groups:
+        grp = coll.groups[g]
+        k_loc = grp.k_pad // M
+        sl = slice(col, col + grp.n_cols)
+        for s in range(M):
+            loc = shard[:, s, sl]
+            recon[:, sl] = np.where(loc >= 0, loc + s * k_loc, recon[:, sl])
+        col += grp.n_cols
+    np.testing.assert_array_equal(recon, flat)
+
+
+# --- checkpoint portability across k_multiple layouts ------------------------
+
+
+def _unsharded_trainer(cfg, tmp_path, seed=0, ckpt_every=0):
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed), 16
+    )
+    return Trainer(
+        jax.jit(step, donate_argnums=(0,)), init_state(params, opt, dyn),
+        static, data, ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
+        migrations=dlrm.checkpoint_migrations(cfg),
+    )
+
+
+def _assert_same_per_feature(cfg_a, state_a, cfg_b, state_b):
+    """Bit-equality of two states that differ only in emb k_multiple
+    padding, compared through the lossless per-feature view."""
+    ca, cb = cfg_a.collection, cfg_b.collection
+    for tree_a, tree_b, unstack in (
+        (state_a.params["emb"], state_b.params["emb"], "unstack_params"),
+        (state_a.opt["m"]["emb"], state_b.opt["m"]["emb"], "unstack_params"),
+        (state_a.ebuf["emb"], state_b.ebuf["emb"], "unstack_buffers"),
+    ):
+        per_a = getattr(ca, unstack)(jax.device_get(tree_a))
+        per_b = getattr(cb, unstack)(jax.device_get(tree_b))
+        for la, lb in zip(jax.tree.leaves(per_a), jax.tree.leaves(per_b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for k in ("bottom", "top"):
+        for la, lb in zip(
+            jax.tree.leaves(state_a.params[k]),
+            jax.tree.leaves(state_b.params[k]),
+        ):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_k_multiple_checkpoint_migration_bitexact(tmp_path):
+    """A checkpoint written under the sharded padding (k_multiple=4,
+    k_pad 12) restores BIT-exact into a 1-device trainer (k_multiple=1,
+    k_pad 9) through the KNOWN_K_MULTIPLES migrations — the pad rows are
+    unreachable and provably zero, so the per-feature view loses
+    nothing."""
+    from repro.checkpoint import save_checkpoint
+
+    cfg4 = dlrm_criteo.reduced(emb_method="cce", cap=300, k_multiple=4)
+    cfg1 = dlrm_criteo.reduced(emb_method="cce", cap=300, k_multiple=1)
+    pads = lambda c: [c.collection.groups[g].k_pad
+                      for g in c.collection.univ_groups]
+    assert pads(cfg4) != pads(cfg1)  # the migration genuinely fires
+
+    tr4 = _unsharded_trainer(cfg4, tmp_path)
+    tr4.run(3)
+    save_checkpoint(
+        str(tmp_path), 3, {"state": tr4.state, "clusters_done": np.int32(0)}
+    )
+
+    tr1 = _unsharded_trainer(cfg1, tmp_path, seed=1)
+    assert tr1.restore_latest() == 3
+    _assert_same_per_feature(cfg4, tr4.state, cfg1, tr1.state)
+    tr1.run(2)  # and training continues from the migrated state
+    assert np.isfinite(tr1.history[-1]["loss"])
+
+
+# --- forced-4-device system tests --------------------------------------------
+
+
+_PRELUDE = """
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+import jax.numpy as jnp
+import numpy as np
+assert jax.device_count() == 4, jax.devices()
+"""
+
+
+def _run_forced(code: str, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [os.path.join(os.path.dirname(__file__), "..", "src"),
+                      env.get("PYTHONPATH")])
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _PRELUDE + textwrap.dedent(code)], env=env,
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert "MULTIDEVICE-OK" in r.stdout, r.stdout[-2000:]
+
+
+@pytest.mark.slow
+def test_sharded_step_bitexact_and_per_device_bytes():
+    """The sharded lookup/forward is BIT-identical to the 1-device jitted
+    program, and neither the live state nor the compiled step's
+    per-device entry parameters hold the full slab/moments/ptr."""
+    _run_forced("""
+    from repro.configs import dlrm_criteo
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.data.translate import HostTranslator
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import MODEL_AXIS, all_batch_axes, make_host_mesh
+    from repro.launch.steps import build_dlrm_train_step
+    from repro.models import dlrm
+    from repro.optim import sgd
+    from repro.train.loop import init_state, split_buffers
+
+    M = 4
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512, k_multiple=M)
+    coll = cfg.collection
+    mesh = make_host_mesh(data=1, model=M)
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    dyn, static = split_buffers(buffers)
+
+    raw = next(clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0), 32))
+    b1 = HostTranslator(coll, buffers["emb"])(raw)
+    b4 = HostTranslator(coll, buffers["emb"], n_shards=M)(raw)
+
+    # jitted-vs-jitted (eager MLP fusion differs; the contract is the
+    # compiled programs agree): lookup AND full forward, bit-exact
+    emb_ref = jax.jit(lambda p, b, r: coll.lookup_all(
+        p, b, None, use_kernel=True, rows=r))(
+        params["emb"], buffers["emb"], b1["rows"])
+    emb_sh = jax.jit(lambda p, b, r: coll.lookup_all(
+        p, b, None, use_kernel=True, rows=r, mesh=mesh,
+        model_axis=MODEL_AXIS, batch_axes=all_batch_axes(mesh)))(
+        params["emb"], buffers["emb"], b4["rows"])
+    assert float(jnp.abs(emb_ref - emb_sh).max()) == 0.0
+    strip = lambda b: {k: v for k, v in b.items()
+                       if k not in ("sparse", "step")}
+    out_ref = jax.jit(lambda p, b, bt: dlrm.forward(p, b, cfg, bt))(
+        params, buffers, strip(b1))
+    out_sh = jax.jit(lambda p, b, bt: dlrm.forward(
+        p, b, cfg, bt, mesh=mesh, model_axis=MODEL_AXIS,
+        batch_axes=all_batch_axes(mesh)))(params, buffers, strip(b4))
+    assert float(jnp.abs(out_ref - out_sh).max()) == 0.0
+
+    # the donated sharded step runs, and its state stays sharded
+    optimizer = sgd(momentum=0.9)
+    step, (state_shape, batch_struct), (state_sh, _) = build_dlrm_train_step(
+        cfg, mesh, batch_size=32, accum=1, optimizer=optimizer,
+        static_buffers=static, with_sparse=True)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                         init_state(params, optimizer, dyn), state_sh)
+    batch = {k: np.asarray(v)[None] for k, v in b4.items() if k != "step"}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    g = coll.univ_groups[0]
+    for arr in (state.params["emb"][g]["tables"],
+                state.opt["m"]["emb"][g]["tables"]):
+        assert max(s.data.nbytes for s in arr.addressable_shards) * M \\
+            == arr.nbytes
+
+    # compiled-step entry params per device: sharded leaves at 1/M
+    nbytes = lambda t: sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(t))
+    sharded = sum(
+        nbytes(state_shape.params["emb"][g]["tables"])
+        + nbytes(state_shape.opt["m"]["emb"][g]["tables"])
+        + nbytes([fb.get("ptr") for fb in state_shape.ebuf["emb"][g]
+                  if isinstance(fb, dict)])
+        for g in coll.univ_groups)
+    total = nbytes(state_shape) + nbytes(batch_struct)
+    est = hlo_cost.liveness(
+        step.lower(state_shape, batch_struct).compile().as_text())
+    assert est.param_bytes <= (total - sharded) + sharded / M + (1 << 20), (
+        est.param_bytes, total, sharded)
+    print("MULTIDEVICE-OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_trainer_clustering_beats_through_transitions(tmp_path):
+    """The paper's central claim holds on the model-parallel trainer:
+    interleaved clustering (>= 2 sharded transitions end to end) helps,
+    and the state is still sharded afterwards."""
+    _run_forced(f"""
+    import argparse
+    from repro.configs import dlrm_criteo
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.launch.train import build_dlrm_sharded_trainer
+    from repro.models import dlrm
+    from repro.train.loop import merge_buffers
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512, k_multiple=4)
+
+    def train(cluster_every):
+        args = argparse.Namespace(
+            emb="cce", emb_cap=512, seed=0, batch=64, accum=1, lr=5e-2,
+            momentum=0.9, ckpt_dir={str(tmp_path)!r}, ckpt_every=0,
+            cluster_every=cluster_every, fail_at=[])
+        tr = build_dlrm_sharded_trainer(cfg, args, model=4)
+        tr.run(90)
+        data_cfg = ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0)
+        batch = next(clickstream_batches(data_cfg, 512, host_id=1,
+                                         n_hosts=2))
+        buffers = merge_buffers(jax.device_get(tr.state.ebuf),
+                                tr.static_buffers)
+        bce = float(dlrm.bce_loss(
+            jax.device_get(tr.state.params), buffers, cfg, batch))
+        return tr, bce
+
+    tr_c, with_c = train(30)
+    assert tr_c.clusters_done >= 2, tr_c.clusters_done
+    # still sharded after the transitions
+    g = cfg.collection.univ_groups[0]
+    for arr in (tr_c.state.params["emb"][g]["tables"],
+                tr_c.state.opt["m"]["emb"][g]["tables"]):
+        assert max(s.data.nbytes for s in arr.addressable_shards) * 4 \\
+            == arr.nbytes
+    _, without = train(0)
+    assert with_c <= without + 0.01, (with_c, without)
+    print("MULTIDEVICE-OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_checkpoint_roundtrips_with_1device_trainer(tmp_path):
+    """A model-sharded trainer's checkpoint restores BIT-exact into a
+    1-device trainer (different k_multiple layout) and back, through the
+    existing migration machinery — checkpoints store gathered arrays, so
+    portability is a pure layout question."""
+    dir_a = str(tmp_path / "a")
+    dir_b = str(tmp_path / "b")
+    _run_forced(f"""
+    import argparse
+    from repro.configs import dlrm_criteo
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.launch.train import build_dlrm_sharded_trainer
+    from repro.models import dlrm
+    from repro.optim import sgd
+    from repro.train.loop import (
+        Trainer, init_state, make_train_step, split_buffers)
+
+    cfg4 = dlrm_criteo.reduced(emb_method="cce", cap=300, k_multiple=4)
+    cfg1 = dlrm_criteo.reduced(emb_method="cce", cap=300, k_multiple=1)
+
+    def sharded(ckpt_dir):
+        args = argparse.Namespace(
+            emb="cce", emb_cap=300, seed=0, batch=32, accum=1, lr=1e-2,
+            momentum=0.9, ckpt_dir=ckpt_dir, ckpt_every=4,
+            cluster_every=0, fail_at=[])
+        return build_dlrm_sharded_trainer(cfg4, args, model=4)
+
+    def onedev(ckpt_dir, ckpt_every=0):
+        params, buffers = dlrm.init(jax.random.PRNGKey(1), cfg1)
+        dyn, static = split_buffers(buffers)
+        opt = sgd(momentum=0.9)
+        step = make_train_step(
+            lambda p, b, mb: (dlrm.bce_loss(p, b, cfg1, mb), {{}}),
+            opt, lambda s: jnp.float32(1e-2), static)
+        data = clickstream_batches(ClickstreamConfig(
+            vocab_sizes=cfg1.vocab_sizes, seed=0), 32)
+        return Trainer(
+            jax.jit(step, donate_argnums=(0,)),
+            init_state(params, opt, dyn), static, data,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+            migrations=dlrm.checkpoint_migrations(cfg1))
+
+    def same_per_feature(cfg_a, sa, cfg_b, sb):
+        ca, cb = cfg_a.collection, cfg_b.collection
+        pairs = [
+            (sa.params["emb"], sb.params["emb"], "unstack_params"),
+            (sa.opt["m"]["emb"], sb.opt["m"]["emb"], "unstack_params"),
+            (sa.ebuf["emb"], sb.ebuf["emb"], "unstack_buffers"),
+        ]
+        for ta, tb, un in pairs:
+            pa = getattr(ca, un)(jax.device_get(ta))
+            pb = getattr(cb, un)(jax.device_get(tb))
+            for la, lb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        for k in ("bottom", "top"):
+            for la, lb in zip(jax.tree.leaves(sa.params[k]),
+                              jax.tree.leaves(sb.params[k])):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    # sharded writer -> 1-device reader
+    tr4 = sharded({dir_a!r})
+    tr4.run(4)           # auto-saves at step 4
+    tr4.ckpt.wait()
+    tr1 = onedev({dir_a!r})
+    assert tr1.restore_latest() == 4
+    same_per_feature(cfg4, tr4.state, cfg1, tr1.state)
+
+    # 1-device writer -> sharded reader
+    tr1b = onedev({dir_b!r}, ckpt_every=2)
+    tr1b.run(2)
+    tr1b.ckpt.wait()
+    tr4b = sharded({dir_b!r})
+    assert tr4b.restore_latest() == 2
+    same_per_feature(cfg1, tr1b.state, cfg4, tr4b.state)
+    # and the restored state landed on the sharded layout
+    g4 = cfg4.collection.univ_groups[0]
+    slab = tr4b.state.params["emb"][g4]["tables"]
+    assert max(s.data.nbytes for s in slab.addressable_shards) * 4 \\
+        == slab.nbytes
+    tr4b.run(2)  # trains on from the restored sharded state
+    print("MULTIDEVICE-OK")
+    """)
