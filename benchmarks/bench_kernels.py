@@ -31,6 +31,10 @@ optimizer moments, pointer tables) from the step's own output shardings,
 written to ``BENCH_shard.json`` (also a CI artifact).  Needs a
 multi-device runtime; the CLI re-execs itself under a forced 4-device
 CPU when launched on one device.
+
+``--obs`` benches the in-step telemetry's overhead on the reduced DLRM
+step — off, on, and on with the async metrics pump draining — written
+to ``BENCH_obs.json`` (also a CI artifact; the claim is <= 2%).
 """
 import json
 import time
@@ -457,6 +461,87 @@ def bench_stream(out=print, json_path="BENCH_stream.json",
     return result
 
 
+def bench_obs(out=print, json_path="BENCH_obs.json", steps=30, batch=512,
+              reps=5):
+    """Telemetry overhead on the reduced DLRM train step (DESIGN.md §10).
+
+    Three variants of the SAME jitted step loop: telemetry off, telemetry
+    on (metrics returned but never read — the async-dispatch steady
+    state), and telemetry on with the ``MetricsPump`` draining every
+    record lag steps late.  The telemetry reductions fuse into the step's
+    single program (the ``train_step_telemetry`` audit spec pins the
+    launch count), so the claim is <= 2% step-time overhead; min-of-reps
+    suppresses host noise."""
+    from repro.configs import dlrm_criteo
+    from repro.data import ClickstreamConfig, clickstream_batches
+    from repro.models import dlrm
+    from repro.obs import MetricsPump, TelemetryConfig
+    from repro.optim import sgd
+    from repro.train.loop import init_state, make_train_step, split_buffers
+
+    cfg = dlrm_criteo.reduced(emb_method="cce", cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    raw = next(clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=0), batch
+    ))
+    batch_tree = {k: jnp.asarray(v)[None] for k, v in raw.items()
+                  if k != "step"}
+
+    def build(telemetry):
+        return jax.jit(make_train_step(
+            loss_fn, opt, lambda s: jnp.float32(0.05), static,
+            telemetry=telemetry,
+        ))
+
+    def run_loop(step_fn, pump=None):
+        """min-of-reps wall time per step for a `steps`-long loop."""
+        best = float("inf")
+        for _ in range(reps):
+            state = init_state(params, opt, dyn)
+            # warm: compile outside the timed region
+            state, m = step_fn(state, batch_tree)
+            jax.block_until_ready(state)
+            t0 = time.perf_counter()
+            for s in range(steps):
+                state, m = step_fn(state, batch_tree)
+                if pump is not None:
+                    pump.push(s, m)
+            if pump is not None:
+                pump.flush()
+            jax.block_until_ready(state)
+            best = min(best, (time.perf_counter() - t0) / steps * 1e6)
+        return best
+
+    t_off = run_loop(build(None))
+    t_on = run_loop(build(TelemetryConfig()))
+    t_pump = run_loop(build(TelemetryConfig()), pump=MetricsPump(lag=8))
+
+    result = {
+        "backend": jax.default_backend(),
+        "steps": steps,
+        "batch": batch,
+        "reps": reps,
+        "step_us": {"off": t_off, "on": t_on, "on_pump_drain": t_pump},
+        "overhead_pct": {
+            "on": (t_on - t_off) / t_off * 100,
+            "on_pump_drain": (t_pump - t_off) / t_off * 100,
+        },
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out(f"obs: step us off={t_off:.0f} on={t_on:.0f} on+pump={t_pump:.0f}")
+    out("overhead pct: " + json.dumps(
+        {k: round(v, 2) for k, v in result["overhead_pct"].items()}))
+    out(f"wrote {json_path}")
+    return result
+
+
 def bench_shard(out=print, json_path="BENCH_shard.json"):
     """Replicated vs model-sharded DLRM train step at full Criteo scale.
 
@@ -558,9 +643,13 @@ if __name__ == "__main__":
                     help="only the looped/3-group/unified launch bench")
     ap.add_argument("--shard", action="store_true",
                     help="replicated-vs-sharded AOT comparison (multi-device)")
+    ap.add_argument("--obs", action="store_true",
+                    help="telemetry off/on/on+pump step-overhead bench")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if args.stream:
+    if args.obs:
+        bench_obs(json_path=args.json or "BENCH_obs.json")
+    elif args.stream:
         bench_stream(json_path=args.json or "BENCH_stream.json")
     elif args.collection:
         bench_collection(json_path=args.json or "BENCH_collection.json")

@@ -24,6 +24,8 @@ import numpy as np
 from repro.configs import dlrm_criteo
 from repro.data import ClickstreamConfig, clickstream_batches
 from repro.models import dlrm
+from repro.obs import RunLog, TelemetryConfig
+from repro.obs.runlog import default_manifest
 from repro.optim import sgd
 from repro.stream import ClusterTrigger, make_step_cell_counter
 from repro.train.loop import (
@@ -74,6 +76,10 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--cap", type=int, default=512)
+    # --obs RUN.jsonl: in-step telemetry + structured run log (the SAME
+    # log survives the injected crash below — resume-replayed events
+    # dedupe, so the log reads as one contiguous run)
+    ap.add_argument("--obs", default=None, metavar="RUN.jsonl")
     args = ap.parse_args()
 
     cfg = dlrm_criteo.reduced(emb_method="cce", cap=args.cap)
@@ -99,9 +105,14 @@ def main():
         cfg, dlrm_criteo.reduced_stream(window=max(4, args.steps // 20),
                                         async_fold=True),
     )
+    telemetry = TelemetryConfig() if args.obs else None
+    runlog = (
+        RunLog(args.obs, manifest=default_manifest("dlrm_criteo_reduced"))
+        if args.obs else None
+    )
     step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static,
                            sketch_fn=make_step_cell_counter(tracker),
-                           donate=True)
+                           telemetry=telemetry, donate=True)
     state = init_state(params, opt, dyn)
     trigger = ClusterTrigger(entropy_drop=0.1, drift_threshold=0.25, warmup=2)
     print(f"sketch tracker: {tracker.nbytes / 1e3:.0f} kB for vocabs "
@@ -124,6 +135,7 @@ def main():
         id_tracker=tracker, trigger=trigger,
         failures=FailureInjector((fail_step,)),
         migrations=dlrm.checkpoint_migrations(cfg),
+        runlog=runlog,
     )
 
     try:
@@ -154,6 +166,10 @@ def main():
           f"steady-state step {trainer.monitor.mean * 1e3:.1f} ms "
           f"({cfg.collection.n_lookup_launches} heavy lookup launch/step, "
           f"sketch delta in-step)")
+    if runlog is not None:
+        runlog.close()
+        print(f"run log: {args.obs}  "
+              f"(summarize: python -m repro.obs summarize {args.obs})")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ with the rule instances that encode its invariants.  ``run_audit`` runs
 a named config's whole bundle and returns a ``Report`` that serializes
 to ``AUDIT_report.json`` and carries the CI exit code.
 
-The ``dlrm_criteo`` bundle audits the four canonical programs:
+The ``dlrm_criteo`` bundle audits the canonical programs:
 
   * ``fwd``          — DLRM forward: ONE pallas launch, clean dtypes,
                        no callbacks/transfers/large consts.
@@ -18,6 +18,10 @@ The ``dlrm_criteo`` bundle audits the four canonical programs:
                        dispatches), every TrainState leaf aliased to an
                        output, nothing dead but the transition-only
                        ``epoch`` counters.
+  * ``train_step_telemetry`` — the same step with ``repro.obs`` in-step
+                       health metrics on: identical launch budget,
+                       donation coverage, and no-callback invariants —
+                       the gate that proves the instrumentation free.
   * ``serve_lookup`` — the host-translated inference lookup: one launch
                        and ZERO reads of the ptr/hs pointer tables
                        (DESIGN.md §4's pod contract).
@@ -142,7 +146,7 @@ def _build_grad(cfg, batch_size):
     )
 
 
-def _build_train_step(cfg, batch_size, stream_cfg):
+def _build_train_step(cfg, batch_size, stream_cfg, *, telemetry=False):
     import jax
 
     from repro.models import dlrm
@@ -162,9 +166,14 @@ def _build_train_step(cfg, batch_size, stream_cfg):
     sketch_fn = None
     if stream_cfg is not None:
         sketch_fn = make_step_cell_counter(dlrm.make_id_tracker(cfg, stream_cfg))
+    tcfg = None
+    if telemetry:
+        from repro.obs.telemetry import TelemetryConfig
+
+        tcfg = TelemetryConfig()
     step = make_train_step(
         loss_fn, opt, lambda s: jnp.float32(0.05), static,
-        sketch_fn=sketch_fn, donate=True,
+        sketch_fn=sketch_fn, telemetry=tcfg, donate=True,
     )
     state = jax.eval_shape(lambda: init_state(params, opt, dyn))
     batch = {
@@ -172,7 +181,9 @@ def _build_train_step(cfg, batch_size, stream_cfg):
         for k, v in _batch_struct(cfg, batch_size, label=True).items()
     }
     return AuditProgram.capture(
-        step, state, batch, name="train_step", donate_argnums=(0,),
+        step, state, batch,
+        name="train_step_telemetry" if telemetry else "train_step",
+        donate_argnums=(0,),
     )
 
 
@@ -212,6 +223,24 @@ def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
         AuditSpec(
             "train_step",
             lambda: _build_train_step(cfg, batch_size, stream_cfg),
+            (
+                LaunchBudget(2),
+                DonationCoverage(),
+                DeadInput(allow=_EPOCH_ALLOW),
+                *_HYGIENE,
+            ),
+            cost_rules=no_collectives,
+        ),
+        # the telemetry-enabled step carries the SAME invariants as the
+        # bare one — in-step health metrics (repro.obs) are pure jnp
+        # reductions that must not add launches, break donation, or
+        # smuggle in a host callback.  This spec is what makes "the
+        # instrumentation is free" a gated claim rather than a comment.
+        AuditSpec(
+            "train_step_telemetry",
+            lambda: _build_train_step(
+                cfg, batch_size, stream_cfg, telemetry=True
+            ),
             (
                 LaunchBudget(2),
                 DonationCoverage(),
@@ -358,11 +387,13 @@ def _build_assign_all_sharded(cfg):
     )
 
 
-def _build_train_step_sharded(cfg):
+def _build_train_step_sharded(cfg, *, telemetry=False):
     """The model-parallel DLRM train step over a (1, n_devices) mesh —
     the slab/moments/ptr enter sharded per ``dlrm_state_specs``, batch
     ids arrive host-translated and pre-bucketed, and the id routing runs
-    as in-step all-to-all."""
+    as in-step all-to-all.  With ``telemetry`` the in-step health metrics
+    (including the per-shard routing-occupancy skew read off the
+    pre-bucketed rows) ride the same program."""
     import dataclasses as _dc
 
     import jax
@@ -374,12 +405,20 @@ def _build_train_step_sharded(cfg):
     n = len(jax.devices())
     mesh = make_host_mesh(data=1, model=n)
     cfg = _dc.replace(cfg, emb_k_multiple=n)
+    tcfg = None
+    if telemetry:
+        from repro.obs.telemetry import TelemetryConfig
+
+        tcfg = TelemetryConfig()
     jitted, (state_shape, batch_struct), _ = build_dlrm_train_step(
         cfg, mesh, batch_size=32, accum=1, optimizer=sgd(momentum=0.9),
+        telemetry=tcfg,
     )
     return AuditProgram.capture(
         jitted, state_shape, batch_struct,
-        name="train_step_sharded", donate_argnums=(0,),
+        name="train_step_sharded_telemetry" if telemetry
+        else "train_step_sharded",
+        donate_argnums=(0,),
     )
 
 
@@ -430,6 +469,20 @@ def dlrm_sharded_audits(cfg):
         AuditSpec(
             "train_step_sharded",
             lambda: _build_train_step_sharded(cfg),
+            (
+                LaunchBudget(2),
+                DonationCoverage(),
+                NoDeviceGatherOf(("ptr", "hs")),
+                DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
+                *_HYGIENE,
+            ),
+            cost_rules=(ici_collectives, replication_debt),
+        ),
+        # telemetry-enabled twin: the routing-skew/occupancy metrics must
+        # not add launches, collectives kinds, callbacks, or replication
+        AuditSpec(
+            "train_step_sharded_telemetry",
+            lambda: _build_train_step_sharded(cfg, telemetry=True),
             (
                 LaunchBudget(2),
                 DonationCoverage(),

@@ -497,8 +497,14 @@ class EmbeddingCollection:
         """(n_cols, B, T) rows + supertable -> (B, n_cols*dsub)."""
         from repro.kernels import ops as kops
 
-        if use_kernel:
-            return kops.cce_lookup(rows, group_params["tables"])
+        # trace span only (HLO metadata — profiler timelines group the
+        # fused lookup under one name); no effect on the jaxpr
+        with jax.named_scope("emb/fused-lookup"):
+            if use_kernel:
+                return kops.cce_lookup(rows, group_params["tables"])
+            return self._univ_lookup_jnp(group_params, rows)
+
+    def _univ_lookup_jnp(self, group_params, rows):
         tabs = group_params["tables"]  # (C, T, k, dsub)
 
         def col(tab, r):  # (T, k, dsub), (B, T)
@@ -551,16 +557,22 @@ class EmbeddingCollection:
         def body(slab_loc, rows_loc):
             # slab_loc (n_cols, T, k_loc, dsub); rows_loc (B_loc, n_cols, T)
             # global rows or (B_loc, M, n_cols, T) shard-local buckets
-            if pre_bucketed:
-                b = jnp.moveaxis(rows_loc, 1, 0)  # (M, B_loc, n_cols, T)
-            else:
-                b = bucket_rows(rows_loc, k_loc, M, jnp)
-            recv = jax.lax.all_to_all(b, model_axis, split_axis=0, concat_axis=0)
+            with jax.named_scope("emb/route"):
+                if pre_bucketed:
+                    b = jnp.moveaxis(rows_loc, 1, 0)  # (M, B_loc, n_cols, T)
+                else:
+                    b = bucket_rows(rows_loc, k_loc, M, jnp)
+                recv = jax.lax.all_to_all(
+                    b, model_axis, split_axis=0, concat_axis=0
+                )
             B_loc = rows_loc.shape[0]
             r = jnp.moveaxis(recv.reshape(M * B_loc, n_cols, T_g), 0, 1)
             part = self._univ_lookup(grp, {"tables": slab_loc}, r, use_kernel)
             part = part.reshape(M, B_loc, n_cols * grp.dsub)
-            back = jax.lax.all_to_all(part, model_axis, split_axis=0, concat_axis=0)
+            with jax.named_scope("emb/route-back"):
+                back = jax.lax.all_to_all(
+                    part, model_axis, split_axis=0, concat_axis=0
+                )
             return back.sum(axis=0)  # (B_loc, n_cols*dsub)
 
         rows_spec = P(batch_axes, *([None] * (rows.ndim - 1)))

@@ -151,5 +151,9 @@ def translate_batches(batches, translator: HostTranslator, *,
                       drop_sparse: bool = False):
     """Wrap a batch iterator with the host translation stage (the input
     pipeline runs on CPU hosts — see data/synthetic.py)."""
+    from repro.obs.trace import span
+
     for batch in batches:
-        yield translator(batch, drop_sparse=drop_sparse)
+        with span("translate"):
+            out = translator(batch, drop_sparse=drop_sparse)
+        yield out

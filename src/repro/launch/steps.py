@@ -222,7 +222,8 @@ def dlrm_batch_struct(cfg, batch_size: int, *, accum: int = 1,
 
 def build_dlrm_train_step(cfg, mesh, *, batch_size: int, accum: int = 1,
                           optimizer=None, lr_fn=None, static_buffers=None,
-                          with_sparse: bool = False, donate: bool = True):
+                          with_sparse: bool = False, donate: bool = True,
+                          telemetry=None):
     """The donated model-parallel DLRM step for a (data, model) mesh.
 
     Returns ``(jitted_step, (state_shape, batch_struct),
@@ -232,7 +233,13 @@ def build_dlrm_train_step(cfg, mesh, *, batch_size: int, accum: int = 1,
     device (``all_batch_axes``), and the supertable lookup routes ids by
     all-to-all inside the step (``EmbeddingCollection._univ_lookup_sharded``).
     On a mesh without a nontrivial model axis this degrades to the plain
-    data-parallel step — same code path, no sharded lookup."""
+    data-parallel step — same code path, no sharded lookup.
+
+    ``telemetry`` (``repro.obs.TelemetryConfig``) adds the in-step health
+    metrics to the returned metrics dict — including the per-shard
+    routing-bucket occupancy read off the pre-bucketed rows, the
+    all-to-all skew signal.  Same program, same launch count
+    (``train_step_sharded_telemetry`` audit spec)."""
     from repro.models import dlrm
     from repro.optim import sgd
 
@@ -258,6 +265,7 @@ def build_dlrm_train_step(cfg, mesh, *, batch_size: int, accum: int = 1,
 
     step_fn = make_train_step(
         loss_fn, optimizer, lr_fn, static_buffers, accum=accum,
+        telemetry=telemetry,
     )
     state_shape = dlrm_abstract_state(cfg, optimizer)
     sspecs = dlrm_state_specs(cfg, state_shape, n_shards=n_shards)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from repro import configs
 from repro.data import clickstream_batches, lm_token_batches, ClickstreamConfig
 from repro.models import dlrm, lm
+from repro.obs import RunLog, TelemetryConfig
+from repro.obs.runlog import default_manifest
 from repro.optim import adamw, sgd, cosine_schedule
 from repro.optim.remap import remap_opt_state
 from repro.train.freq import IdFrequencyTracker
@@ -33,6 +35,29 @@ from repro.train.loop import (
 )
 
 
+def _obs_kit(args, config_name: str):
+    """(telemetry, trainer obs kwargs) for ``--obs PATH``: in-step health
+    metrics + a structured run log; ``--profile-steps A B`` additionally
+    opens a profiler window (DESIGN.md §10)."""
+    telemetry, kw = None, {}
+    # getattr throughout: tests drive the builders with hand-built
+    # Namespaces that predate the obs flags
+    obs = getattr(args, "obs", None)
+    if obs:
+        telemetry = TelemetryConfig()
+        kw["runlog"] = RunLog(
+            obs, manifest=default_manifest(
+                config_name, mesh={"data": getattr(args, "data_shards", 1),
+                                   "model": getattr(args, "model_shards", 1)},
+            ),
+        )
+    profile_steps = getattr(args, "profile_steps", None)
+    if profile_steps:
+        kw["profile_steps"] = tuple(profile_steps)
+        kw["profile_dir"] = getattr(args, "profile_dir", "profile")
+    return telemetry, kw
+
+
 def build_lm_trainer(cfg, args):
     key = jax.random.PRNGKey(args.seed)
     params, buffers = lm.init(key, cfg)
@@ -43,7 +68,9 @@ def build_lm_trainer(cfg, args):
     def loss_fn(p, b, mb):
         return lm.next_token_loss(p, b, cfg, mb, batch_axes=None)
 
-    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum)
+    telemetry, obs_kw = _obs_kit(args, cfg.name)
+    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum,
+                           telemetry=telemetry)
     state = init_state(params, optimizer, dyn)
     data = lm_token_batches(
         cfg.vocab, args.batch, args.seq, seed=args.seed,
@@ -82,6 +109,7 @@ def build_lm_trainer(cfg, args):
         failures=FailureInjector(tuple(args.fail_at)),
         monitor=StragglerMonitor(),
         seed=args.seed,
+        **obs_kw,
     )
 
 
@@ -107,10 +135,12 @@ def build_dlrm_sharded_trainer(cfg, args, *, model: int, data_shards: int = 1):
         return jnp.float32(args.lr)
 
     track = args.emb == "cce"
+    telemetry, obs_kw = _obs_kit(args, "dlrm_sharded")
     step, _, (state_shardings, _) = build_dlrm_train_step(
         cfg, mesh, batch_size=args.batch, accum=args.accum,
         optimizer=optimizer, lr_fn=lr_fn, static_buffers=static,
         with_sparse=track,  # the host tracker reads raw ids off the batch
+        telemetry=telemetry,
     )
     state = jax.tree.map(
         lambda x, s: jax.device_put(x, s),
@@ -142,6 +172,7 @@ def build_dlrm_sharded_trainer(cfg, args, *, model: int, data_shards: int = 1):
         seed=args.seed,
         migrations=dlrm.checkpoint_migrations(cfg),
         state_shardings=state_shardings,
+        **obs_kw,
     )
 
 
@@ -168,7 +199,9 @@ def build_dlrm_trainer(args):
     def loss_fn(p, b, mb):
         return dlrm.bce_loss(p, b, cfg, mb), {}
 
-    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum)
+    telemetry, obs_kw = _obs_kit(args, "dlrm")
+    step = make_train_step(loss_fn, optimizer, lr_fn, static, accum=args.accum,
+                           telemetry=telemetry)
     state = init_state(params, optimizer, dyn)
     data = clickstream_batches(
         ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=args.seed), args.batch
@@ -190,6 +223,7 @@ def build_dlrm_trainer(args):
         seed=args.seed,
         # pre-collection (per-feature emb layout) checkpoints restore too
         migrations=dlrm.checkpoint_migrations(cfg),
+        **obs_kw,
     )
 
 
@@ -215,6 +249,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--seed", type=int, default=0)
+    # observability (DESIGN.md §10): --obs writes a structured run log
+    # and turns on the in-step telemetry; --profile-steps A B dumps a
+    # jax.profiler trace for that step window
+    ap.add_argument("--obs", default=None, metavar="RUN.jsonl")
+    ap.add_argument("--profile-steps", type=int, nargs=2, default=None)
+    ap.add_argument("--profile-dir", default="profile")
     args = ap.parse_args()
 
     if args.arch == "dlrm":
@@ -230,6 +270,10 @@ def main():
     print(f"{args.arch}: {len(hist)} steps in {dt:.1f}s  "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}  "
           f"stragglers={len(trainer.monitor.flagged)}")
+    if args.obs:
+        trainer.runlog.close()
+        print(f"run log: {args.obs}  "
+              f"(summarize: python -m repro.obs summarize {args.obs})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""In-step device telemetry — health metrics that ride the train step.
+
+Everything here is pure ``jnp`` reductions over values the step already
+holds (the averaged gradients, the params, the batch), returned as extra
+entries under ``metrics["telemetry"]`` — the same protocol
+``metrics["sketch_delta"]`` uses.  The reductions lower INTO the step's
+single program: no extra pallas launches, no callbacks, no transfers
+(the ``train_step_telemetry`` audit spec pins all three).  The host side
+never blocks on these values either — ``repro.obs.pump.MetricsPump``
+drains them N steps behind the dispatch front.
+
+Signals (each gated by a ``TelemetryConfig`` flag):
+
+  * ``emb_grad_norm`` / ``emb_param_norm`` — (G,) per-embedding-group L2
+    norms of gradient / slab.  A group whose grad norm collapses (or
+    explodes) after a clustering transition is the first thing an
+    operator checks.
+  * ``grad_nonfinite`` / ``param_nonfinite`` — (L,) per-param-leaf
+    counts of non-finite elements.  The leaf ORDER is the flatten order
+    of the param tree; ``telemetry_labels`` names each index, which is
+    what attributes a NaN to the emb group that produced it (note a NaN
+    in one leaf's *params* poisons every leaf's *grads* through
+    backprop — attribution reads the param side).
+  * ``rows_occupancy`` — scalar fraction of non-sentinel entries in the
+    host-translated ``rows`` tensor (-1 marks padded sub-table slots;
+    the fused kernel treats them as no-ops).  A drifting occupancy means
+    the fuse layout is wasting kernel work.
+  * ``shard_occupancy`` — (M,) per-model-shard fraction of non-sentinel
+    entries when rows arrive pre-bucketed (B, M, n_cols, T): the
+    all-to-all routing skew.  Zipf traffic concentrates ids; a shard
+    running hot here is the signal the ps-lite routing layer re-balances
+    on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Which in-step signals to compute.  All default on: each is a
+    handful of reductions, fused into the step program for free."""
+
+    emb_norms: bool = True
+    nonfinite: bool = True
+    occupancy: bool = True
+
+
+def telemetry_labels(params) -> dict:
+    """Host-side companion: names for the telemetry vector indices.
+
+    ``leaves[i]`` labels ``grad_nonfinite[i]`` / ``param_nonfinite[i]``
+    (jax flatten order); ``emb_groups`` is G, the length of the
+    ``emb_*_norm`` vectors (0 when params carry no per-group emb list).
+    """
+    paths, _ = jax.tree_util.tree_flatten_with_path(params)
+    emb = params.get("emb") if isinstance(params, dict) else None
+    return {
+        "leaves": tuple(jax.tree_util.keystr(p) for p, _ in paths),
+        "emb_groups": len(emb) if isinstance(emb, (list, tuple)) else 0,
+    }
+
+
+def _group_norm(tree) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+        for leaf in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(jnp.asarray(sq, jnp.float32))
+
+
+def _nonfinite_counts(tree) -> jax.Array:
+    return jnp.stack(
+        [
+            jnp.sum(~jnp.isfinite(leaf), dtype=jnp.int32)
+            for leaf in jax.tree.leaves(tree)
+        ]
+    )
+
+
+def telemetry_metrics(tcfg: TelemetryConfig, grads, params, batch) -> dict:
+    """The in-step telemetry tree — call INSIDE the jitted step with the
+    averaged (pre-clip) grads, the current params, and the full batch
+    (leaves shaped (accum, micro, ...)).  Returns a flat dict of small
+    arrays; ``telemetry_labels(params)`` names the vector indices."""
+    out: dict = {}
+    emb = params.get("emb") if isinstance(params, dict) else None
+    if tcfg.emb_norms and isinstance(emb, (list, tuple)):
+        out["emb_grad_norm"] = jnp.stack([_group_norm(g) for g in grads["emb"]])
+        out["emb_param_norm"] = jnp.stack([_group_norm(p) for p in emb])
+    if tcfg.nonfinite:
+        out["grad_nonfinite"] = _nonfinite_counts(grads)
+        out["param_nonfinite"] = _nonfinite_counts(params)
+    rows = batch.get("rows") if isinstance(batch, dict) else None
+    if tcfg.occupancy and rows is not None:
+        live = (rows >= 0).astype(jnp.float32)
+        out["rows_occupancy"] = jnp.mean(live)
+        if rows.ndim == 5:  # (accum, micro, M, n_cols, T): pre-bucketed
+            out["shard_occupancy"] = jnp.mean(live, axis=(0, 1, 3, 4))
+    return out

@@ -1,0 +1,68 @@
+"""Trace spans and the opt-in profiler window.
+
+``span(name)`` stacks ``jax.named_scope`` (the name lands in the HLO
+metadata of every op traced inside, so device timelines group by logical
+phase) with ``jax.profiler.TraceAnnotation`` (the host-side interval
+shows up in a captured profiler trace).  Both are metadata-only: no
+device work, no effect on the jaxpr's equations — the telemetry audit
+spec's launch budget is unchanged by spans.
+
+The canonical phases the training loop annotates:
+
+    translate    host pointer translation (data/translate.py)
+    dispatch     the jitted train step call
+    sketch-fold  tracker observe / async fold enqueue
+    transition   the eager clustering transition (Alg. 3)
+    checkpoint   async checkpoint save enqueue
+
+``ProfileWindow`` dumps a ``jax.profiler`` trace directory for a
+half-open step window [start, stop) — pass
+``Trainer(profile_steps=(start, stop), profile_dir=...)`` and view the
+result in TensorBoard/XProf.  One window per process: profiling is a
+heavy, explicitly-requested act, not an always-on mode.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Annotate a logical phase on both the device (named_scope -> HLO
+    metadata) and host (TraceAnnotation -> profiler timeline) sides."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@dataclasses.dataclass
+class ProfileWindow:
+    """Opt-in [start, stop) profiler capture, driven by step number."""
+
+    start: int
+    stop: int
+    log_dir: str
+    active: bool = False
+    done: bool = False
+
+    def __post_init__(self):
+        assert self.start < self.stop, "profile window must be non-empty"
+
+    def observe(self, step: int) -> None:
+        """Call once per loop iteration with the step about to run."""
+        if self.active and step >= self.stop:
+            jax.profiler.stop_trace()
+            self.active = False
+            self.done = True
+        if not self.done and not self.active and self.start <= step < self.stop:
+            jax.profiler.start_trace(self.log_dir)
+            self.active = True
+
+    def close(self) -> None:
+        """Stop a still-open capture (end of run / exception path)."""
+        if self.active:
+            jax.profiler.stop_trace()
+            self.active = False
+            self.done = True

@@ -17,6 +17,7 @@ serving deployment at high duty cycle.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -25,6 +26,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs.runlog import LatencyHistogram
 from repro.train.loop import merge_buffers, split_buffers
 
 
@@ -37,6 +39,8 @@ class Request:
     # filled by the engine:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    latency_s: float | None = None  # admit -> retire wall time
+    _t_admit: float | None = None
 
 
 class ServeEngine:
@@ -49,6 +53,7 @@ class ServeEngine:
         max_batch: int = 8,
         max_seq: int = 256,
         sample: str = "greedy",
+        runlog=None,
     ):
         assert not cfg.n_codebooks, "audio serving uses examples/musicgen_decode"
         self.cfg = cfg
@@ -63,6 +68,12 @@ class ServeEngine:
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self.ticks = 0
+        # per-request admit->retire latency at constant memory (the seed
+        # of ROADMAP item 2's p50/p99 serve artifact); optionally logged
+        # to a repro.obs RunLog per retired request + a final histogram
+        # via flush_stats()
+        self.latency = LatencyHistogram()
+        self.runlog = runlog
 
         def _decode(dyn, tokens, pos, cache):
             buffers = merge_buffers(dyn, static)
@@ -114,6 +125,7 @@ class ServeEngine:
             self.pos[slot] = S
             self.last_token[slot] = int(jnp.argmax(logits[0][: self.cfg.vocab]))
             req.generated.append(int(self.last_token[slot]))
+            req._t_admit = time.perf_counter()
 
     def tick(self) -> list[Request]:
         self._admit()
@@ -140,6 +152,25 @@ class ServeEngine:
                 or self.pos[i] >= self.max_seq - 1
             ):
                 req.done = True
+                self._retire(req)
                 finished.append(req)
                 self.slots[i] = None
         return finished
+
+    def _retire(self, req: Request) -> None:
+        req.latency_s = time.perf_counter() - req._t_admit
+        self.latency.observe(req.latency_s)
+        if self.runlog is not None:
+            self.runlog.append(
+                "request", dedupe=False, uid=req.uid,
+                n_prompt=len(req.prompt), n_generated=len(req.generated),
+                latency_s=req.latency_s,
+            )
+
+    def flush_stats(self) -> dict:
+        """Write the aggregate latency histogram to the run log (one
+        ``latency_hist`` event per call) and return it."""
+        hist = self.latency.to_dict() | {"label": "serve-requests"}
+        if self.runlog is not None:
+            self.runlog.append("latency_hist", dedupe=False, **hist)
+        return hist

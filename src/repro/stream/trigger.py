@@ -42,6 +42,17 @@ class TriggerEvent:
     fire: bool
     reason: str = ""  # "entropy-collapse" | "drift" | ""
 
+    def as_dict(self) -> dict:
+        """Plain-python fields for the run log's ``trigger`` event
+        (numpy scalars coerced so the record is json-clean)."""
+        return {
+            "step": int(self.step),
+            "entropy": float(self.entropy),
+            "drift": float(self.drift),
+            "fire": bool(self.fire),
+            "reason": self.reason,
+        }
+
 
 def _tv_distance(prev_ids, prev_p, ids, p) -> float:
     """Total-variation distance between two truncated head distributions

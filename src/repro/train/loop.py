@@ -30,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager, load_checkpoint
+from repro.obs.pump import MetricsPump
+from repro.obs.trace import ProfileWindow, span
 from repro.optim import Optimizer, clip_by_global_norm
 from repro.optim.compression import compressed_grad_transform, init_error_feedback
 
@@ -90,6 +92,7 @@ def make_train_step(
     compress_grads: bool = False,
     grad_specs: Pytree | None = None,
     sketch_fn: Callable[[Pytree], jax.Array] | None = None,
+    telemetry=None,
     donate: bool = False,
 ):
     """loss_fn(params, buffers, microbatch) -> (loss, metrics dict).
@@ -108,6 +111,14 @@ def make_train_step(
     rides out in ``metrics["sketch_delta"]`` — sketch tracking then adds
     ZERO extra device dispatches (the Trainer hands the delta to
     ``tracker.observe(batch, delta=...)``).
+
+    ``telemetry`` (a ``repro.obs.TelemetryConfig``) rides the same
+    protocol: in-step health metrics (per-emb-group grad/slab norms,
+    per-leaf nonfinite counts, lookup occupancy / routing skew) computed
+    from the averaged pre-clip grads and returned under
+    ``metrics["telemetry"]`` — pure jnp reductions fused into the step's
+    single program, so the launch count is unchanged (the
+    ``train_step_telemetry`` audit spec asserts it).
 
     ``donate=True`` returns the step already jitted with
     ``donate_argnums=(0,)``: the TrainState's buffers (params, optimizer
@@ -157,6 +168,15 @@ def make_train_step(
         grads = jax.tree.map(lambda g: g / accum, grads)
         loss = loss_sum / accum
 
+        health = None
+        if telemetry is not None:
+            from repro.obs.telemetry import telemetry_metrics
+
+            # measured on the TRUE averaged gradient, before int8
+            # compression and clipping rewrite it
+            with jax.named_scope("telemetry"):
+                health = telemetry_metrics(telemetry, grads, state.params, batch)
+
         err = state.err
         if compress_grads:
             grads, err = compressed_grad_transform(grads, err)
@@ -171,6 +191,8 @@ def make_train_step(
         metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
         if delta is not None:
             metrics["sketch_delta"] = delta
+        if health is not None:
+            metrics["telemetry"] = health
         return new_state, metrics
 
     if donate:
@@ -197,6 +219,16 @@ class StragglerMonitor:
     On a pod, per-host step times feed this via the metrics channel; the
     flagged host ids drive the re-shard/evict decision.  Here it watches
     the single-process step and is unit-tested with injected delays.
+
+    SEMANTIC NOTE (the async-pump change): ``Trainer.run`` used to feed
+    this dispatch+sync wall time (it forced ``block_until_ready`` every
+    step).  It now feeds DISPATCH-TO-DISPATCH wall time: dispatch stays
+    pipelined, and once the dispatch queue applies backpressure the
+    interval converges to true per-step throughput — which is what a
+    straggler threshold should watch.  Early-run intervals (queue still
+    filling) are shorter than device step time; the ``warmup`` window
+    absorbs them.  Thresholds tuned against the old synced numbers read
+    slightly high against the new ones.
     """
 
     def __init__(self, alpha: float = 0.1, k: float = 4.0, warmup: int = 5):
@@ -299,6 +331,13 @@ class Trainer:
         seed: int = 0,
         migrations=(),
         state_shardings=None,
+        runlog=None,
+        pump: MetricsPump | None = None,
+        pump_lag: int = 8,
+        history_max: int | None = 10_000,
+        sync_every: int = 0,
+        profile_steps: tuple[int, int] | None = None,
+        profile_dir: str | None = None,
     ):
         self.train_step = train_step
         self.state = state
@@ -355,7 +394,29 @@ class Trainer:
         # step's layout before the next step runs, so donation never has
         # to reshard and no replica silently ends up with the full slab
         self.state_shardings = state_shardings
-        self.history: list[dict] = []
+        # observability (DESIGN.md §10): metrics leave the device through
+        # the async pump — a ring drained ``pump_lag`` steps behind the
+        # dispatch front, so reading a metric never syncs the pipeline.
+        # ``history`` is the pump's bounded record deque (``history_max``
+        # caps a long run's host memory); it is EXACT after run() returns
+        # (final flush) and, mid-run, after every ``sync_every`` steps
+        # when that is set — tests that read history mid-run set
+        # sync_every=1 and see the old always-synced behavior.
+        self.runlog = runlog
+        self.pump = pump or MetricsPump(
+            lag=pump_lag, maxlen=history_max,
+            sink=runlog.log_step if runlog is not None else None,
+        )
+        self.sync_every = sync_every
+        self.profile = (
+            ProfileWindow(*profile_steps, log_dir=profile_dir or "profile")
+            if profile_steps is not None else None
+        )
+        self._last_dispatch: float | None = None
+
+    @property
+    def history(self):
+        return self.pump.history
 
     def _place(self, state: TrainState) -> TrainState:
         if self.state_shardings is None:
@@ -373,84 +434,144 @@ class Trainer:
         return {k: r(v) for k, v in batch.items() if k != "step"}
 
     def run(self, n_steps: int):
-        for _ in range(n_steps):
-            step = int(self.state.step)
-            if self.failures is not None:
-                self.failures.maybe_fail(step)
-            raw = next(self.data_iter)
-            batch = self._reshape_accum(raw)
-            t0 = time.perf_counter()
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(self.state.params)
-            dt = time.perf_counter() - t0
-            self.monitor.observe(step, dt)
-            # a step built with sketch_fn= already computed the tracker's
-            # cell delta inside its single launch — hand it over so the
-            # tracker skips its own counter dispatch (zero extra
-            # dispatches; the host head/ring bookkeeping is unchanged)
-            delta = metrics.pop("sketch_delta", None)
-            if self.id_tracker is not None:
-                if delta is not None:
-                    self.id_tracker.observe(raw, delta=delta)
-                else:
-                    self.id_tracker.observe(raw)
-            self.history.append({k: float(v) for k, v in metrics.items()} | {"step": step})
+        # ONE sync to seed the host step mirror (blocking on state.step
+        # every iteration — like the old loop did — waits for the whole
+        # previous step and kills async dispatch; the mirror is exact
+        # because the step increments by 1 and transitions/restores only
+        # happen between run() calls or below, where we track them)
+        step = int(self.state.step)
+        try:
+            for _ in range(n_steps):
+                if self.profile is not None:
+                    self.profile.observe(step)
+                if self.failures is not None:
+                    try:
+                        self.failures.maybe_fail(step)
+                    except Exception as e:
+                        # make the records of the completed steps durable
+                        # before the crash propagates, and log the fire
+                        # (dedupe off: a from-scratch restart re-fires at
+                        # the same step and both fires are real)
+                        self.pump.flush()
+                        if self.runlog is not None:
+                            self.runlog.append(
+                                "fault", step=step, dedupe=False, error=str(e),
+                            )
+                        raise
+                raw = next(self.data_iter)
+                batch = self._reshape_accum(raw)
+                with span("dispatch"):
+                    self.state, metrics = self.train_step(self.state, batch)
+                # dispatch-to-dispatch wall time (see StragglerMonitor's
+                # semantic note): attributed to this step, first step of a
+                # run() has no previous dispatch to measure from
+                t1 = time.perf_counter()
+                dt = None
+                if self._last_dispatch is not None:
+                    dt = t1 - self._last_dispatch
+                    self.monitor.observe(step, dt)
+                self._last_dispatch = t1
+                # a step built with sketch_fn= already computed the tracker's
+                # cell delta inside its single launch — hand it over so the
+                # tracker skips its own counter dispatch (zero extra
+                # dispatches; the host head/ring bookkeeping is unchanged)
+                delta = metrics.pop("sketch_delta", None)
+                if self.id_tracker is not None:
+                    with span("sketch-fold"):
+                        if delta is not None:
+                            self.id_tracker.observe(raw, delta=delta)
+                        else:
+                            self.id_tracker.observe(raw)
+                self.pump.push(step, metrics, extra={"dt": dt})
 
-            new_step = step + 1
-            # adaptive schedule: a windowed tracker snapshots statistics
-            # at window close; the trigger turns them into a fire/hold
-            # decision.  Deterministic given the batch stream + restored
-            # trigger state, so resume replays the schedule exactly.
-            can_cluster = self.cluster_fn is not None and (
-                not self.cluster_max or self.clusters_done < self.cluster_max
-            )
-            triggered = False
-            if self.id_tracker is not None and self.trigger is not None:
-                poll = getattr(self.id_tracker, "poll_window", None)
-                stats = poll() if poll is not None else None
-                if stats is not None:
-                    # the availability gate rides INTO the trigger: a fire
-                    # that cannot run a transition must not commit
-                    # fire-state (reference reset, spacing counter)
-                    triggered = self.trigger.update(
-                        stats, step=new_step, can_fire=can_cluster
-                    ).fire
-            periodic = bool(
-                self.cluster_every and new_step % self.cluster_every == 0
-            )
-            if can_cluster and (periodic or triggered):
-                if self.id_tracker is not None:  # async folds must land
-                    getattr(self.id_tracker, "flush", lambda: None)()
-                key = jax.random.fold_in(jax.random.PRNGKey(self.seed), new_step)
-                buffers = merge_buffers(self.state.ebuf, self.static_buffers)
-                if self._cluster_takes_opt:
-                    params, buffers, opt = self.cluster_fn(
-                        key, self.state.params, buffers, self.state.opt
-                    )
-                else:
-                    params, buffers = self.cluster_fn(key, self.state.params, buffers)
-                    opt = self.state.opt
-                dyn, self.static_buffers = split_buffers(buffers)
-                # int8-EF residuals are per-row state like the moments: the
-                # rewritten rows make them meaningless, and (unlike moments)
-                # zeroing them is always sound — EF only corrects future
-                # quantization, it carries no required state
-                err = (
-                    init_error_feedback(params)
-                    if self.state.err is not None else None
+                new_step = step + 1
+                # adaptive schedule: a windowed tracker snapshots statistics
+                # at window close; the trigger turns them into a fire/hold
+                # decision.  Deterministic given the batch stream + restored
+                # trigger state, so resume replays the schedule exactly.
+                can_cluster = self.cluster_fn is not None and (
+                    not self.cluster_max or self.clusters_done < self.cluster_max
                 )
-                self.state = self._place(self.state._replace(
-                    params=params, ebuf=dyn, opt=opt, err=err
-                ))
-                self.clusters_done += 1
-                if self.translator is not None:  # ptr/hs mirrors went stale
-                    self.translator.update(buffers["emb"])
+                triggered = False
+                if self.id_tracker is not None and self.trigger is not None:
+                    poll = getattr(self.id_tracker, "poll_window", None)
+                    stats = poll() if poll is not None else None
+                    if stats is not None:
+                        # the availability gate rides INTO the trigger: a fire
+                        # that cannot run a transition must not commit
+                        # fire-state (reference reset, spacing counter)
+                        ev = self.trigger.update(
+                            stats, step=new_step, can_fire=can_cluster
+                        )
+                        triggered = ev.fire
+                        if self.runlog is not None:
+                            # replayed evaluations after a resume dedupe on
+                            # (event, step) — same policy restore_latest
+                            # applies to trigger.events
+                            self.runlog.append("trigger", **ev.as_dict())
+                periodic = bool(
+                    self.cluster_every and new_step % self.cluster_every == 0
+                )
+                if can_cluster and (periodic or triggered):
+                    with span("transition"):
+                        if self.id_tracker is not None:  # async folds must land
+                            getattr(self.id_tracker, "flush", lambda: None)()
+                        key = jax.random.fold_in(
+                            jax.random.PRNGKey(self.seed), new_step
+                        )
+                        buffers = merge_buffers(self.state.ebuf, self.static_buffers)
+                        if self._cluster_takes_opt:
+                            params, buffers, opt = self.cluster_fn(
+                                key, self.state.params, buffers, self.state.opt
+                            )
+                        else:
+                            params, buffers = self.cluster_fn(
+                                key, self.state.params, buffers
+                            )
+                            opt = self.state.opt
+                        dyn, self.static_buffers = split_buffers(buffers)
+                        # int8-EF residuals are per-row state like the moments:
+                        # the rewritten rows make them meaningless, and (unlike
+                        # moments) zeroing them is always sound — EF only
+                        # corrects future quantization, it carries no required
+                        # state
+                        err = (
+                            init_error_feedback(params)
+                            if self.state.err is not None else None
+                        )
+                        self.state = self._place(self.state._replace(
+                            params=params, ebuf=dyn, opt=opt, err=err
+                        ))
+                        self.clusters_done += 1
+                        if self.translator is not None:  # mirrors went stale
+                            self.translator.update(buffers["emb"])
+                    if self.runlog is not None:
+                        self.runlog.append(
+                            "transition", step=new_step,
+                            reason="trigger" if triggered else "periodic",
+                            clusters_done=self.clusters_done,
+                        )
 
-            if self.ckpt and self.ckpt_every and new_step % self.ckpt_every == 0:
-                self.ckpt.save_async(new_step, self._ckpt_tree())
+                if self.ckpt and self.ckpt_every and new_step % self.ckpt_every == 0:
+                    # flush first: every step record at or before the
+                    # checkpointed step is durable before the save event —
+                    # resume-time replays then dedupe against a complete
+                    # prefix of the log
+                    self.pump.flush()
+                    with span("checkpoint"):
+                        self.ckpt.save_async(new_step, self._ckpt_tree())
+                    if self.runlog is not None:
+                        self.runlog.append("checkpoint_save", step=new_step)
+                elif self.sync_every and new_step % self.sync_every == 0:
+                    self.pump.flush()
+                step = new_step
+        finally:
+            self.pump.flush()
+            if self.profile is not None:
+                self.profile.close()
         if self.ckpt:
             self.ckpt.wait()
-        return self.history
+        return list(self.history)
 
     def _ckpt_tree(self):
         # clusters_done and the id histograms ride the checkpoint so a
@@ -618,4 +739,9 @@ class Trainer:
             self.translator.update(
                 merge_buffers(self.state.ebuf, self.static_buffers)["emb"]
             )
+        # the restore gap is not a step interval; don't let it poison the
+        # monitor's dispatch-to-dispatch EMA
+        self._last_dispatch = None
+        if self.runlog is not None:
+            self.runlog.append("checkpoint_restore", step=step, dedupe=False)
         return step

@@ -391,12 +391,17 @@ def test_reduced_dlrm_audit_is_green():
     report = run_audit("dlrm_criteo_reduced")
     assert report.ok, report.to_json()
     assert [p["name"] for p in report.programs] == [
-        "fwd", "grad", "train_step", "serve_lookup",
+        "fwd", "grad", "train_step", "train_step_telemetry", "serve_lookup",
     ]
     # the report records the launch counts the budgets pinned
     by_name = {p["name"]: p for p in report.programs}
     assert by_name["fwd"]["n_eqns_by_primitive"]["pallas_call"] == 1
     assert by_name["train_step"]["n_eqns_by_primitive"]["pallas_call"] == 2
+    # telemetry is free: same launch count as the bare step
+    assert (
+        by_name["train_step_telemetry"]["n_eqns_by_primitive"]["pallas_call"]
+        == 2
+    )
 
 
 def test_cli_source_only_exit_codes(tmp_path):

@@ -356,7 +356,7 @@ def test_cli_budget_gate_roundtrip_and_doctored_regression(tmp_path):
     assert res.returncode == 0, res.stderr[-3000:]
     committed = json.load(open(path))
     assert set(committed["programs"]) == {
-        "fwd", "grad", "train_step", "serve_lookup",
+        "fwd", "grad", "train_step", "train_step_telemetry", "serve_lookup",
     }
 
     # 2. clean gate: current == committed, exits 0, diff all-ok
@@ -417,6 +417,7 @@ def test_sharded_transition_audit_on_forced_mesh():
     profs = out["profiles"]
     assert set(profs) == {
         "cluster_sharded", "assign_all_sharded", "train_step_sharded",
+        "train_step_sharded_telemetry",
     }
     for prof in profs.values():
         assert prof["num_partitions"] == 4

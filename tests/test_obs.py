@@ -1,0 +1,424 @@
+"""Observability (DESIGN.md §10): in-step telemetry is launch-free, the
+run log is restart-exact, the pump never loses records, the serve engine
+records latencies, and the CLI summarizer stays jax-free."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import dlrm_criteo
+from repro.data import ClickstreamConfig, clickstream_batches
+from repro.models import dlrm
+from repro.obs import LatencyHistogram, RunLog, TelemetryConfig
+from repro.obs.pump import MetricsPump
+from repro.obs.runlog import read_runlog
+from repro.obs.summary import format_summary, summarize_dict
+from repro.obs.telemetry import telemetry_labels, telemetry_metrics
+from repro.obs.trace import ProfileWindow
+from repro.optim import sgd
+from repro.stream import ClusterTrigger
+from repro.train.loop import (
+    FailureInjector,
+    Trainer,
+    init_state,
+    make_train_step,
+    split_buffers,
+)
+
+
+def _setup(emb="cce", seed=0, telemetry=None):
+    cfg = dlrm_criteo.reduced(emb_method=emb, cap=512)
+    params, buffers = dlrm.init(jax.random.PRNGKey(seed), cfg)
+    dyn, static = split_buffers(buffers)
+    opt = sgd(momentum=0.9)
+
+    def loss_fn(p, b, mb):
+        return dlrm.bce_loss(p, b, cfg, mb), {}
+
+    step = make_train_step(loss_fn, opt, lambda s: jnp.float32(0.05), static,
+                           telemetry=telemetry)
+    state = init_state(params, opt, dyn)
+    data = clickstream_batches(
+        ClickstreamConfig(vocab_sizes=cfg.vocab_sizes, seed=seed), 32
+    )
+    return cfg, step, state, static, data
+
+
+def _one_batch(data):
+    return {k: np.asarray(v)[None] for k, v in next(data).items() if k != "step"}
+
+
+# --- in-step telemetry --------------------------------------------------------
+
+
+def test_telemetry_adds_zero_launches_and_leaves_math_untouched():
+    """The tentpole contract: telemetry-on lowers to the SAME launch
+    count as telemetry-off (pure jnp reductions fused into the one
+    program), and the training math is bit-identical."""
+    from repro.analysis import count_primitive
+
+    _, step_off, state, _, data = _setup()
+    _, step_on, state_on, _, _ = _setup(telemetry=TelemetryConfig())
+    batch = _one_batch(data)
+
+    jx_off = jax.make_jaxpr(step_off)(state, batch)
+    jx_on = jax.make_jaxpr(step_on)(state, batch)
+    assert count_primitive(jx_on, "pallas_call") == count_primitive(
+        jx_off, "pallas_call"
+    )
+    # no host round-trips smuggled in either
+    for prim in ("pure_callback", "io_callback", "debug_callback"):
+        assert count_primitive(jx_on, prim) == 0
+
+    s_off, m_off = step_off(state, batch)
+    s_on, m_on = step_on(state_on, batch)
+    np.testing.assert_array_equal(float(m_off["loss"]), float(m_on["loss"]))
+    for a, b in zip(jax.tree.leaves(s_off.params), jax.tree.leaves(s_on.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    health = m_on["telemetry"]
+    labels = telemetry_labels(state_on.params)
+    assert health["emb_grad_norm"].shape == (labels["emb_groups"],)
+    assert health["emb_param_norm"].shape == (labels["emb_groups"],)
+    assert health["grad_nonfinite"].shape == (len(labels["leaves"]),)
+    assert int(health["param_nonfinite"].sum()) == 0
+    assert np.all(np.isfinite(np.asarray(health["emb_grad_norm"])))
+
+
+def test_nonfinite_attribution_names_the_planted_leaf():
+    """A NaN planted in ONE emb group's params must light up exactly that
+    leaf of ``param_nonfinite`` — grads go NaN everywhere through
+    backprop, which is why attribution reads the param side."""
+    _, step, state, _, data = _setup(telemetry=TelemetryConfig())
+    labels = telemetry_labels(state.params)
+    # pick the supertable leaf of emb group 0 (the reduced CCE config has
+    # one universal collection group)
+    target = next(
+        i for i, name in enumerate(labels["leaves"]) if "['emb'][0]" in name
+    )
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state.params)
+    leaves = [leaf for _, leaf in paths]
+    poisoned = leaves[target].at[(0,) * leaves[target].ndim].set(jnp.nan)
+    params = jax.tree_util.tree_unflatten(treedef, leaves[:target] + [poisoned] + leaves[target + 1:])
+    state = state._replace(params=params)
+
+    _, metrics = step(state, _one_batch(data))
+    pn = np.asarray(metrics["telemetry"]["param_nonfinite"])
+    assert pn[target] == 1
+    assert pn.sum() == 1  # no other leaf implicated
+    # the group's slab norm is poisoned too — the operator's first glance
+    assert not np.isfinite(float(metrics["telemetry"]["emb_param_norm"][0]))
+
+
+def test_occupancy_metrics_match_numpy():
+    tcfg = TelemetryConfig(emb_norms=False, nonfinite=False)
+    rng = np.random.default_rng(0)
+    rows4 = rng.integers(-1, 5, size=(1, 8, 3, 4)).astype(np.int32)
+    out = telemetry_metrics(tcfg, {}, {}, {"rows": jnp.asarray(rows4)})
+    assert float(out["rows_occupancy"]) == pytest.approx(
+        (rows4 >= 0).mean()
+    )
+    assert "shard_occupancy" not in out  # unbucketed rows: no shard axis
+
+    rows5 = rng.integers(-1, 5, size=(2, 4, 3, 2, 5)).astype(np.int32)
+    out = telemetry_metrics(tcfg, {}, {}, {"rows": jnp.asarray(rows5)})
+    np.testing.assert_allclose(
+        np.asarray(out["shard_occupancy"]),
+        (rows5 >= 0).mean(axis=(0, 1, 3, 4)),
+        rtol=1e-6,
+    )
+
+
+# --- the async pump -----------------------------------------------------------
+
+
+def test_pump_lag_and_flush():
+    drained = []
+    pump = MetricsPump(lag=3, sink=drained.append)
+    for s in range(5):
+        pump.push(s, {"loss": jnp.float32(s)})
+    # 5 pushed, lag 3 -> exactly 2 drained so far
+    assert len(drained) == 2 and len(pump) == 3
+    pump.flush()
+    assert [r["step"] for r in drained] == [0, 1, 2, 3, 4]
+    assert [r["loss"] for r in drained] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert all(isinstance(r["loss"], float) for r in drained)
+
+
+def test_trainer_history_exact_bounded_and_sync_every():
+    """The pumped history equals the old always-synced history (same
+    seed, same stream), sync_every=1 drains eagerly, and history_max
+    bounds host memory."""
+    _, step, state, static, data = _setup(seed=3)
+    tr = Trainer(jax.jit(step, donate_argnums=(0,)), state, static, data)
+    hist = tr.run(12)
+    assert [h["step"] for h in hist] == list(range(12))
+
+    _, step2, state2, static2, data2 = _setup(seed=3)
+    tr2 = Trainer(jax.jit(step2, donate_argnums=(0,)), state2, static2, data2,
+                  sync_every=1)
+    tr2.run(12)
+    assert len(tr2.pump) == 0  # eager drain: nothing left in flight
+    np.testing.assert_array_equal(
+        [h["loss"] for h in hist], [h["loss"] for h in tr2.history]
+    )
+
+    _, step3, state3, static3, data3 = _setup(seed=3)
+    tr3 = Trainer(jax.jit(step3, donate_argnums=(0,)), state3, static3, data3,
+                  history_max=5)
+    hist3 = tr3.run(12)
+    assert len(hist3) == 5 and hist3[-1]["step"] == 11  # newest kept
+
+
+# --- run log ------------------------------------------------------------------
+
+
+def test_runlog_roundtrip_dedupe_and_resume(tmp_path):
+    p = tmp_path / "run.jsonl"
+    with RunLog(p, manifest={"config": "t"}) as rl:
+        assert rl.append("step", step=0, loss=1.0)
+        assert not rl.append("step", step=0, loss=1.0)  # replay drops
+        assert rl.append("fault", step=0, dedupe=False, error="x")
+        assert rl.append("fault", step=0, dedupe=False, error="x")
+
+    recs = read_runlog(p)
+    assert recs[0]["event"] == "manifest" and recs[0]["config"] == "t"
+    assert [r["event"] for r in recs[1:]] == ["step", "fault", "fault"]
+
+    # re-open: appends (no second manifest), replays still dedupe
+    with RunLog(p) as rl2:
+        assert not rl2.append("step", step=0, loss=1.0)
+        assert rl2.append("step", step=1, loss=0.9)
+    recs = read_runlog(p)
+    assert sum(r["event"] == "manifest" for r in recs) == 1
+    assert [r["step"] for r in recs if r["event"] == "step"] == [0, 1]
+
+
+def test_runlog_tolerates_truncated_tail(tmp_path):
+    p = tmp_path / "run.jsonl"
+    with RunLog(p) as rl:
+        rl.append("step", step=0, loss=1.0)
+    with open(p, "a") as f:
+        f.write('{"event": "step", "st')  # writer died mid-record
+    assert [r["event"] for r in read_runlog(p)] == ["manifest", "step"]
+    with RunLog(p) as rl:  # and resume still works
+        assert rl.append("step", step=1)
+
+
+def test_runlog_restart_exact_through_triggered_transition(tmp_path):
+    """Crash at step 8 (after a ckpt at 5 and a triggered transition),
+    restore, replay with the SAME log file: one contiguous set of step
+    records, one record per trigger window, and the step/trigger/
+    transition records equal an uninterrupted run's."""
+
+    def mk_parts(seed):
+        cfg, step, state, static, data = _setup(seed=seed)
+        tracker = dlrm.make_id_tracker(
+            cfg, dlrm_criteo.reduced_stream(window=3))
+        trigger = ClusterTrigger(entropy_drop=0.05, drift_threshold=0.05,
+                                 warmup=1)
+
+        def cluster_fn(key, p, b, opt):
+            return dlrm.cluster_tables(key, p, b, cfg, opt,
+                                       id_counts=tracker.counts)
+
+        return cfg, step, state, static, data, tracker, trigger, cluster_fn
+
+    def run(fail: bool):
+        log = tmp_path / ("a.jsonl" if fail else "b.jsonl")
+        cfg, step, state, static, data, tracker, trigger, cf = mk_parts(1)
+        rl = RunLog(log)
+        tr = Trainer(
+            jax.jit(step, donate_argnums=(0,)), state, static, data,
+            ckpt_dir=str(tmp_path / ("ca" if fail else "cb")), ckpt_every=5,
+            cluster_fn=cf, cluster_max=3, id_tracker=tracker, trigger=trigger,
+            failures=FailureInjector((8,)) if fail else None,
+            runlog=rl, seed=1,
+        )
+        if fail:
+            with pytest.raises(RuntimeError):
+                tr.run(12)
+            restored = tr.restore_latest()  # logs checkpoint_restore
+            assert restored == 5
+            rl.close()
+            cfg2, step2, _, static2, _, tracker2, trigger2, cf2 = mk_parts(1)
+            tracker2.load_state_tree(tracker.state_tree())
+            trigger2.load_state_tree(trigger.state_tree())
+            rl2 = RunLog(log)  # REOPEN: replayed events must dedupe
+            tr2 = Trainer(
+                jax.jit(step2, donate_argnums=(0,)), tr.state, static2,
+                clickstream_batches(
+                    ClickstreamConfig(vocab_sizes=cfg2.vocab_sizes, seed=1),
+                    32, start_step=restored,
+                ),
+                ckpt_dir=str(tmp_path / "ca"), cluster_fn=cf2, cluster_max=3,
+                id_tracker=tracker2, trigger=trigger2, runlog=rl2, seed=1,
+            )
+            tr2.run(12 - restored)
+            rl2.close()
+        else:
+            tr.run(12)
+            rl.close()
+        return read_runlog(log)
+
+    crashed, clean = run(True), run(False)
+
+    steps = [r for r in crashed if r["event"] == "step"]
+    assert sorted(r["step"] for r in steps) == list(range(12))  # contiguous
+    assert len(steps) == 12  # ... and deduped (no replays)
+    clean_steps = [r for r in clean if r["event"] == "step"]
+    by_step = {r["step"]: r for r in steps}
+    for r in clean_steps:  # restart-exact losses, window by window
+        assert by_step[r["step"]]["loss"] == r["loss"]
+
+    for ev in ("trigger", "transition"):
+        a = [(r["step"], r.get("fire"), r.get("reason")) for r in crashed
+             if r["event"] == ev]
+        b = [(r["step"], r.get("fire"), r.get("reason")) for r in clean
+             if r["event"] == ev]
+        assert a == b and len(set(a)) == len(a), ev
+    assert any(r["event"] == "transition" for r in crashed)
+
+    # the crash run's extra lifecycle events are real, not noise
+    assert sum(r["event"] == "fault" for r in crashed) == 1
+    assert sum(r["event"] == "checkpoint_restore" for r in crashed) == 1
+    assert any(r["event"] == "checkpoint_save" for r in crashed)
+    assert not any(r["event"] in ("fault", "checkpoint_restore")
+                   for r in clean)
+
+
+# --- latency histogram / serve ------------------------------------------------
+
+
+def test_latency_histogram_percentiles_and_clamping():
+    h = LatencyHistogram(lo=1e-3, hi=1.0, n_buckets=20)
+    for v in [0.01] * 98 + [0.5] * 2:
+        h.observe(v)
+    assert h.n == 100
+    # upper-edge estimate: true quantile <= reported, within one bucket
+    assert 0.01 <= h.percentile(50) <= 0.02
+    assert 0.5 <= h.percentile(99) <= 1.0
+    h.observe(1e-9)  # clamps into the tail buckets, never dropped
+    h.observe(1e9)
+    assert h.n == 102
+    d = h.to_dict()
+    assert d["n"] == 102 and len(d["counts"]) == 20
+    assert sum(d["counts"]) == 102
+
+
+def test_serve_engine_records_latency(tmp_path):
+    from repro.models import lm
+    from repro.models.config import ModelConfig
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+                      dtype=jnp.float32, remat="none")
+    params, buffers = lm.init(jax.random.PRNGKey(0), cfg)
+    rl = RunLog(tmp_path / "serve.jsonl")
+    eng = ServeEngine(cfg, params, buffers, max_batch=2, max_seq=32, runlog=rl)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=np.asarray([5, 17, 3], np.int32),
+                           max_tokens=4))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(r.latency_s is not None and r.latency_s > 0 for r in done)
+    stats = eng.flush_stats()
+    assert stats["n"] == 3 and stats["p99"] >= stats["p50"] > 0
+    rl.close()
+
+    recs = read_runlog(tmp_path / "serve.jsonl")
+    reqs = [r for r in recs if r["event"] == "request"]
+    assert sorted(r["uid"] for r in reqs) == [0, 1, 2]
+    assert all(r["n_generated"] == 4 for r in reqs)
+    hist = [r for r in recs if r["event"] == "latency_hist"]
+    assert len(hist) == 1 and hist[0]["n"] == 3
+
+
+# --- trace / profiler ---------------------------------------------------------
+
+
+def test_profile_window_state_machine(tmp_path):
+    pw = ProfileWindow(1, 3, log_dir=str(tmp_path / "prof"))
+    pw.observe(0)
+    assert not pw.active
+    pw.observe(1)
+    assert pw.active
+    jnp.square(jnp.arange(8)).block_until_ready()  # give the trace content
+    pw.observe(2)
+    assert pw.active
+    pw.observe(3)
+    assert not pw.active and pw.done
+    pw.observe(1)  # one window per process: never re-arms
+    assert not pw.active
+    pw.close()  # idempotent after done
+    assert os.path.isdir(tmp_path / "prof")
+
+
+# --- summarizer CLI (jax-free) ------------------------------------------------
+
+
+def _write_synthetic_log(path):
+    with RunLog(path, manifest={"config": "t", "backend": "cpu"}) as rl:
+        for s in range(10):
+            rl.append("step", step=s, loss=1.0 - 0.05 * s, dt=0.01,
+                      telemetry={"shard_occupancy": [0.5, 0.4]})
+        rl.append("trigger", step=3, entropy=2.0, drift=0.1, fire=False,
+                  reason="hold")
+        rl.append("trigger", step=6, entropy=1.0, drift=0.9, fire=True,
+                  reason="entropy-drop")
+        rl.append("transition", step=6, reason="trigger", clusters_done=1)
+        rl.append("checkpoint_save", step=5)
+
+
+def test_summarize_report(tmp_path):
+    p = tmp_path / "run.jsonl"
+    _write_synthetic_log(p)
+    recs = read_runlog(p)
+    d = summarize_dict(recs)
+    assert d["steps"]["n"] == 10 and d["steps"]["contiguous"]
+    assert d["steps"]["loss_last"] == pytest.approx(0.55)
+    assert d["steps"]["dt_p50_ms"] == pytest.approx(10.0, rel=0.2)
+    assert d["triggers"]["n"] == 2 and d["triggers"]["fired"] == 1
+    assert d["transitions"] == [{"step": 6, "reason": "trigger"}]
+    assert d["shard_balance"]["skew"] == pytest.approx(0.5 / 0.4)
+    text = format_summary(recs)
+    assert "steps" in text and "trigger" in text
+
+
+def test_cli_summarize_and_jax_free_import(tmp_path):
+    p = tmp_path / "run.jsonl"
+    _write_synthetic_log(p)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env = {**os.environ, "PYTHONPATH": src}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "summarize", str(p),
+         "--json", str(tmp_path / "s.json")],
+        capture_output=True, text=True, env=env,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "steps" in out.stdout
+    assert json.load(open(tmp_path / "s.json"))["steps"]["n"] == 10
+
+    # the CLI path must never pull in jax: run logs are read on hosts
+    # without the accelerator stack
+    probe = subprocess.run(
+        [sys.executable, "-c",
+         "import sys, repro.obs, repro.obs.summary, repro.obs.__main__; "
+         "assert 'jax' not in sys.modules, 'obs CLI imported jax'"],
+        capture_output=True, text=True, env=env,
+    )
+    assert probe.returncode == 0, probe.stderr
+
+    missing = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "summarize",
+         str(tmp_path / "nope.jsonl")],
+        capture_output=True, text=True, env=env,
+    )
+    assert missing.returncode == 2
