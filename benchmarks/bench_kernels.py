@@ -35,6 +35,14 @@ CPU when launched on one device.
 ``--obs`` benches the in-step telemetry's overhead on the reduced DLRM
 step — off, on, and on with the async metrics pump draining — written
 to ``BENCH_obs.json`` (also a CI artifact; the claim is <= 2%).
+
+``--serve`` benches the DLRM serve engine (DESIGN.md §11) under
+synthetic Zipf(1.0) traffic at a 10M-id space: per-request p50/p99
+latency for head traffic (fully cache-hit, launch-free), mixed Zipf
+traffic, and a cache-disabled baseline (every batch pays the fused
+launch), plus cache-hit rates and launches per batch — written to
+``BENCH_serve.json`` with the per-request run log in
+``BENCH_serve_run.jsonl`` (both CI artifacts).
 """
 import json
 import time
@@ -631,6 +639,137 @@ def bench_shard(out=print, json_path="BENCH_shard.json"):
     return result
 
 
+def bench_serve(out=print, json_path="BENCH_serve.json",
+                run_log_path="BENCH_serve_run.jsonl",
+                vocab_sizes=(10_000_000, 100_000, 1_000),
+                n_requests=256, max_batch=16, zipf_s=1.0, heavy=4096):
+    """Serve-path latency under Zipf traffic (serve/dlrm.py, ROADMAP 2).
+
+    Three traffic scenarios through identical engines (CPU wall times —
+    structural claims, not TPU latencies):
+
+    * ``head``: every id drawn from the SpaceSaving head the cache holds
+      — fully-hit batches, ZERO launches (the millions-of-users case the
+      cache exists for: the heavy head answered without the supertable).
+    * ``zipf``: bounded-Zipf(s) ids over the full vocab — mixed batches,
+      compacted cold sub-batch per launch, realistic hit rates.
+    * ``uncached``: the same Zipf traffic with the cache disabled —
+      every batch pays the fused launch.
+
+    The gated claim: head (cache-hit) p50 strictly below the uncached
+    fused-launch p50."""
+    import numpy as np
+
+    from repro.models.dlrm import DLRMConfig
+    from repro.models import dlrm
+    from repro.obs.runlog import LatencyHistogram, RunLog
+    from repro.serve.dlrm import DLRMServeEngine, ServeRequest
+    from repro.stream import StreamConfig
+
+    cfg = DLRMConfig(
+        vocab_sizes=vocab_sizes, n_dense=13, emb_dim=16,
+        bottom_mlp=(64, 16), top_mlp=(64, 1),
+        emb_method="cce", emb_param_cap=4096 * 16,
+    )
+    params, buffers = dlrm.init(jax.random.PRNGKey(0), cfg)
+    tracker = dlrm.make_id_tracker(cfg, StreamConfig(
+        width=1 << 12, heavy=heavy, window=64, async_fold=False,
+    ))
+    rng = np.random.default_rng(0)
+
+    # bounded Zipf(s): inverse-CDF over the harmonic weights — np.random
+    # .zipf needs s > 1 and is unbounded, neither fits a fixed id space
+    cdfs = []
+    for v in vocab_sizes:
+        w = 1.0 / np.arange(1, v + 1, dtype=np.float64) ** zipf_s
+        cdf = np.cumsum(w)
+        cdfs.append(cdf / cdf[-1])
+
+    def zipf_batch(n):
+        return np.stack(
+            [np.searchsorted(c, rng.random(n)).astype(np.int64) for c in cdfs],
+            axis=1,
+        )
+
+    tracker.observe({"sparse": zipf_batch(8192)})  # warm the heads
+
+    def drive(eng, sparse, label):
+        eng.hist = LatencyHistogram()
+        eng.hist_hit = LatencyHistogram()
+        eng.hist_cold = LatencyHistogram()
+        eng.counters.clear()
+        dense = rng.normal(size=(len(sparse), cfg.n_dense)).astype(np.float32)
+        for s in range(0, len(sparse), max_batch):
+            for i in range(s, min(s + max_batch, len(sparse))):
+                eng.submit(ServeRequest(uid=i, dense=dense[i], sparse=sparse[i]))
+            eng.drain()
+        stats = eng.flush_stats()
+        res = {
+            "p50_s": eng.hist.percentile(50),
+            "p99_s": eng.hist.percentile(99),
+            **{k: stats[k] for k in (
+                "n_requests", "n_batches", "n_launches", "launches_per_batch",
+                "hit_rate_requests", "hit_rate_ids",
+            )},
+        }
+        out(f"serve[{label}]: p50 {res['p50_s'] * 1e3:.2f} ms  "
+            f"p99 {res['p99_s'] * 1e3:.2f} ms  "
+            f"hit {res['hit_rate_requests']:.0%} req / "
+            f"{res['hit_rate_ids']:.0%} ids  "
+            f"launches/batch {res['launches_per_batch']:.2f}")
+        return res
+
+    with RunLog(run_log_path, manifest={"config": "bench_serve"}) as rl:
+        cached = DLRMServeEngine(
+            params, buffers, cfg, tracker=tracker, max_batch=max_batch,
+            latency_budget_s=0.0, run_log=rl,
+        )
+        uncached = DLRMServeEngine(
+            params, buffers, cfg, cache=False, max_batch=max_batch,
+            latency_budget_s=0.0, run_log=rl,
+        )
+        # head traffic: Zipf over each feature's CACHED ids, so every
+        # batch is answerable without the supertable
+        head_cols = []
+        for f in range(cfg.n_sparse):
+            ids = cached.cache.ids[f]
+            w = 1.0 / np.arange(1, ids.size + 1, dtype=np.float64) ** zipf_s
+            cdf = np.cumsum(w)
+            ranks = np.searchsorted(cdf / cdf[-1], rng.random(n_requests))
+            head_cols.append(ids[ranks])
+        head_sparse = np.stack(head_cols, axis=1)
+        zipf_sparse = zipf_batch(n_requests)
+
+        # compile outside the timed scenarios (hit + cold programs)
+        cached.predict(np.zeros((max_batch, cfg.n_dense), np.float32),
+                       head_sparse[:max_batch])
+        cached.predict(np.zeros((max_batch, cfg.n_dense), np.float32),
+                       zipf_sparse[:max_batch])
+        uncached.predict(np.zeros((max_batch, cfg.n_dense), np.float32),
+                         zipf_sparse[:max_batch])
+
+        result = {
+            "backend": jax.default_backend(),
+            "vocab_sizes": list(vocab_sizes),
+            "zipf_s": zipf_s,
+            "n_requests": n_requests,
+            "max_batch": max_batch,
+            "cache_slots": cached.cache.n_slots,
+            "head": drive(cached, head_sparse, "head"),
+            "zipf": drive(cached, zipf_sparse, "zipf"),
+            "uncached": drive(uncached, zipf_sparse, "uncached"),
+        }
+    result["hit_p50_below_uncached_p50"] = bool(
+        result["head"]["p50_s"] < result["uncached"]["p50_s"]
+    )
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    out(f"cache-hit p50 below uncached p50: "
+        f"{result['hit_p50_below_uncached_p50']}")
+    out(f"wrote {json_path} + {run_log_path}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -645,9 +784,14 @@ if __name__ == "__main__":
                     help="replicated-vs-sharded AOT comparison (multi-device)")
     ap.add_argument("--obs", action="store_true",
                     help="telemetry off/on/on+pump step-overhead bench")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve-engine latency under Zipf traffic "
+                         "(hot cache vs uncached)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if args.obs:
+    if args.serve:
+        bench_serve(json_path=args.json or "BENCH_serve.json")
+    elif args.obs:
         bench_obs(json_path=args.json or "BENCH_obs.json")
     elif args.stream:
         bench_stream(json_path=args.json or "BENCH_stream.json")

@@ -202,6 +202,42 @@ def _build_serve_lookup(cfg, batch_size):
     )
 
 
+def _build_serve_dlrm(cfg, batch_size, *, cold: bool, cache_slots: int = 4096):
+    """The serve engine's two programs (serve/dlrm.py, DESIGN.md §11).
+
+    ``cold=False`` is the fully-cache-hit batch: every embedding answered
+    by the hot-cache gather, the supertable never enters the program —
+    LaunchBudget(0) makes "a hit batch skips the launch" structural.
+    ``cold=True`` is the mixed batch: cache gather + ONE fused launch over
+    the compacted cold sub-batch on host-translated rows; the emb buffers
+    ride along so NoDeviceGatherOf has real ptr/hs inputs to clear (a
+    vacuous pass is itself a finding)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.dlrm import make_serve_fns
+
+    coll = cfg.collection
+    params, buffers = _abstract_dlrm(cfg)
+    hit_fn, cold_fn = make_serve_fns(cfg, use_kernel=True)
+    cache_tab = jax.ShapeDtypeStruct((cache_slots, cfg.emb_dim), jnp.float32)
+    slots = jax.ShapeDtypeStruct((batch_size, cfg.n_sparse), jnp.int32)
+    dense = jax.ShapeDtypeStruct((batch_size, cfg.n_dense), jnp.float32)
+    if not cold:
+        mlp = {"bottom": params["bottom"], "top": params["top"]}
+        return AuditProgram.capture(
+            hit_fn, mlp, cache_tab, slots, dense, name="serve_dlrm_hit",
+        )
+    rows = jax.ShapeDtypeStruct(
+        (batch_size, coll.rows_n_cols, coll.rows_n_tables), jnp.int32
+    )
+    cold_idx = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+    return AuditProgram.capture(
+        cold_fn, params, buffers["emb"], cache_tab, slots, dense, rows,
+        cold_idx, name="serve_dlrm_cold",
+    )
+
+
 def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
     """The canonical DLRM audit bundle for any DLRMConfig."""
     # the 1-device contract is ZERO collectives in every compiled module —
@@ -258,6 +294,27 @@ def dlrm_audits(cfg, stream_cfg=None, *, batch_size: int = 32):
                 DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
                 *_HYGIENE,
             ),
+            cost_rules=no_collectives,
+        ),
+        # the serve engine's cold path: hot-cache gather + ONE fused
+        # launch over the compacted cold sub-batch, no ptr/hs gathers
+        AuditSpec(
+            "serve_dlrm_cold",
+            lambda: _build_serve_dlrm(cfg, batch_size, cold=True),
+            (
+                LaunchBudget(1),
+                NoDeviceGatherOf(("ptr", "hs")),
+                DeadInput(allow=("ptr", "hs", *_EPOCH_ALLOW)),
+                *_HYGIENE,
+            ),
+            cost_rules=no_collectives,
+        ),
+        # the fully-cache-hit path: ZERO heavy launches — the supertable
+        # is not even an input to the program
+        AuditSpec(
+            "serve_dlrm_hit",
+            lambda: _build_serve_dlrm(cfg, batch_size, cold=False),
+            (LaunchBudget(0), DeadInput(), *_HYGIENE),
             cost_rules=no_collectives,
         ),
     )

@@ -398,6 +398,21 @@ class EmbeddingCollection:
         input a host-translating pipeline ships (DESIGN.md §4/§6)."""
         return sum(self.groups[g].n_cols for g in self.univ_groups)
 
+    @functools.cached_property
+    def rows_col_feature(self):
+        """(rows_n_cols,) int32: GLOBAL feature index owning each column
+        of the host-translated rows tensor.  Lets a serve-side cache mask
+        exactly the columns of a cache-hit feature to the -1 sentinel
+        (``HostTranslator.rows_masked``) so the fused kernel does zero
+        work for them — per-feature column spans, in the same order
+        ``rows`` concatenates universal groups."""
+        out = []
+        for g in self.univ_groups:
+            grp = self.groups[g]
+            for f_local, n in enumerate(grp.col_counts):
+                out.extend([grp.features[f_local]] * n)
+        return np.asarray(out, np.int32)
+
     # --- init / stacking --------------------------------------------------
 
     def init(self, key):

@@ -123,6 +123,24 @@ class HostTranslator:
             return np.moveaxis(rows, (0, 1, 2), (1, 2, 0)).astype(np.int32)
         return np.moveaxis(rows, 0, 1).astype(np.int32)
 
+    def rows_masked(self, sparse: np.ndarray, skip: np.ndarray) -> np.ndarray:
+        """Translate like :meth:`rows`, then mask every column of a
+        skipped (batch-element, feature) pair to the ``-1`` sentinel.
+
+        ``skip`` is (B, n_features) bool — True where a serve-side cache
+        already holds the decoded embedding, so the fused kernel must do
+        ZERO work for that feature (the sentinel is a free no-op in the
+        one-hot kernel; the cache value is added outside the launch).
+        Single-shard only: the serve path has no all-to-all."""
+        if self.n_shards != 1:
+            raise ValueError(
+                "rows_masked is a serve-path helper; it does not emit "
+                f"shard-bucketed rows (n_shards={self.n_shards})"
+            )
+        rows = self.rows(sparse)
+        m = np.asarray(skip, bool)[:, self.collection.rows_col_feature]
+        return np.where(m[:, :, None], np.int32(-1), rows)
+
     def __call__(self, batch: dict, *, drop_sparse: bool = False) -> dict:
         """Translate one batch dict: adds ``rows``; ``drop_sparse=True``
         removes the raw ids so the translated rows are the ONLY sparse

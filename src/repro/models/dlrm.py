@@ -147,6 +147,24 @@ def init(key, cfg: DLRMConfig):
     return params, buffers
 
 
+def interact(params, cfg: DLRMConfig, dense, emb):
+    """Everything downstream of the embedding lookup: bottom MLP, pairwise
+    dot interaction, top MLP -> (B,) logits.
+
+    ``params`` needs only the ``bottom``/``top`` subtrees.  Split out of
+    ``forward`` so the serve engine (serve/dlrm.py) can feed embeddings
+    assembled from its hot cache through the identical math — a cache hit
+    and a supertable lookup produce bit-identical logits."""
+    dense = dense.astype(cfg.dtype)
+    x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
+    V = jnp.concatenate([x0[:, None, :], emb.astype(cfg.dtype)], axis=1)
+    # pairwise dot interactions (upper triangle, no self)
+    inter = jnp.einsum("bie,bje->bij", V, V)
+    iu, ju = jnp.triu_indices(V.shape[1], k=1)
+    feats = jnp.concatenate([x0, inter[:, iu, ju]], axis=-1)
+    return _apply_mlp(params["top"], feats)[:, 0]
+
+
 def forward(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,
             model_axis=None, batch_axes=None):
     """batch: {"dense": (B, 13) f32, "sparse": (B, 26) int32} -> (B,) logits.
@@ -162,8 +180,6 @@ def forward(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,
     FULL batch layout including the model axis —
     ``launch.mesh.all_batch_axes``).  MLPs stay data-parallel under
     jit's normal sharding propagation."""
-    dense = batch["dense"].astype(cfg.dtype)
-    x0 = _apply_mlp(params["bottom"], dense, final_act=True)  # (B, emb_dim)
     use_kernel = cfg.emb_use_kernel
     if use_kernel is None:
         use_kernel = jax.default_backend() in ("tpu", "cpu")
@@ -172,12 +188,7 @@ def forward(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,
         use_kernel=use_kernel, rows=batch.get("rows"),
         mesh=mesh, model_axis=model_axis, batch_axes=batch_axes,
     )  # (B, n_sparse, emb_dim) in O(n_groups) heavy lookups (ONE on Criteo)
-    V = jnp.concatenate([x0[:, None, :], emb], axis=1)  # (B, 27, emb_dim)
-    # pairwise dot interactions (upper triangle, no self)
-    inter = jnp.einsum("bie,bje->bij", V, V)
-    iu, ju = jnp.triu_indices(V.shape[1], k=1)
-    feats = jnp.concatenate([x0, inter[:, iu, ju]], axis=-1)
-    return _apply_mlp(params["top"], feats)[:, 0]
+    return interact(params, cfg, batch["dense"], emb)
 
 
 def bce_loss(params, buffers, cfg: DLRMConfig, batch, *, mesh=None,

@@ -628,21 +628,35 @@ def _xlstm_decode(blocks, cfg: ModelConfig, x, cache):
     return x, {"C": C, "n": n, "m": m}
 
 
-def prefill(params, buffers, cfg: ModelConfig, tokens, cache, *, batch_axes=("data",)):
+def prefill(params, buffers, cfg: ModelConfig, tokens, cache, *, batch_axes=("data",),
+            last_idx=None):
     """Process a full prompt, fill the cache, return logits of last position.
 
     For attention families this recomputes k/v per layer and writes them into
     the cache (the standard prefill); for xlstm it runs the chunked forms and
     stores the terminal recurrent state.
+
+    ``last_idx`` (traced scalar, default ``S - 1``) selects which position's
+    logits come back — a serving engine that right-pads prompts into
+    power-of-two length buckets passes the true last-token index so padding
+    never changes the returned logits (causal masking keeps the positions
+    before ``last_idx`` pad-blind; only attention families without a sliding
+    window may pad, since recurrent/ring-buffer caches consume the pads).
     """
     B, S = tokens.shape[0], tokens.shape[1]
+
+    def _last(x):
+        if last_idx is None:
+            return x[:, -1:]
+        return jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+
     if cfg.family == "xlstm":
         # chunked-parallel forms with terminal-state collection: O(S·chunk)
         # prefill, after which decode continues from the recurrent states.
         x = embed(params, buffers, cfg, tokens)
         x = _constrain(x, P(batch_axes, None, None))
         x, cache = _xlstm_forward(params["blocks"], cfg, x, collect_state=True)
-        x = L.apply_norm(params["ln_f"], x[:, -1:])
+        x = L.apply_norm(params["ln_f"], _last(x))
         return logits_fn(params, buffers, cfg, x[:, 0]), cache
     freqs = L.rope_freqs(cfg)
     x = embed(params, buffers, cfg, tokens)
@@ -697,7 +711,7 @@ def prefill(params, buffers, cfg: ModelConfig, tokens, cache, *, batch_axes=("da
         return x, nc
 
     x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
-    x = L.apply_norm(params["ln_f"], x[:, -1:])
+    x = L.apply_norm(params["ln_f"], _last(x))
     return logits_fn(params, buffers, cfg, x[:, 0]), cache
 
 

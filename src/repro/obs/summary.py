@@ -99,6 +99,27 @@ def summarize_dict(records: list[dict]) -> dict:
         out["serve_latency"] = {
             k: h.get(k) for k in ("n", "p50", "p99", "label")
         }
+        if len(hists) > 1:  # the serve engine writes overall/hit/cold
+            out["serve_latency_by_label"] = [
+                {k: h.get(k) for k in ("n", "p50", "p99", "label")}
+                for h in hists
+            ]
+
+    # serve-cache health: per-request hit flags + refresh events
+    # (serve/dlrm.py writes both; request events without the flag are the
+    # LM engine's and are skipped)
+    hits = [r["cache_hit"] for r in ev.get("request", []) if "cache_hit" in r]
+    if hits:
+        out["serve_cache"] = {
+            "n_requests": len(hits),
+            "hit_rate": float(np.mean(hits)),
+        }
+    refreshes = ev.get("cache_refresh", [])
+    if refreshes:
+        out["cache_refreshes"] = [
+            {k: r.get(k) for k in ("reason", "n_slots", "n_features", "churn")}
+            for r in refreshes
+        ]
     return out
 
 
@@ -162,11 +183,24 @@ def format_summary(records: list[dict]) -> str:
         )
     for f in s["faults"]:
         lines.append(f"fault injected: step {f}")
-    if "serve_latency" in s:
-        sl = s["serve_latency"]
+    for sl in s.get("serve_latency_by_label", [s["serve_latency"]]
+                    if "serve_latency" in s else []):
         lines.append(
             f"serve latency ({sl.get('label') or 'requests'}): n={sl['n']}  "
             f"p50 {sl['p50'] * 1e3:.2f} ms  p99 {sl['p99'] * 1e3:.2f} ms"
+        )
+    if "serve_cache" in s:
+        sc = s["serve_cache"]
+        lines.append(
+            f"serve cache: {sc['n_requests']} requests, "
+            f"hit rate {sc['hit_rate']:.1%}"
+        )
+    for r in s.get("cache_refreshes", []):
+        churn = r.get("churn")
+        extra = f"  churn {churn:.2f}" if churn is not None else ""
+        lines.append(
+            f"cache refresh ({r.get('reason')}): {r.get('n_slots')} slots / "
+            f"{r.get('n_features')} features{extra}"
         )
     return "\n".join(lines)
 

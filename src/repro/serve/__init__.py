@@ -1,1 +1,10 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.dlrm import (  # noqa: F401
+    DLRMServeEngine,
+    HotCache,
+    MicroBatcher,
+    ServeRequest,
+    ServeResult,
+    StaleCacheError,
+    make_serve_fns,
+)

@@ -4,14 +4,17 @@ Slot-based design (the TPU-friendly fixed-shape variant of vLLM-style
 serving): the decode cache is allocated once at (max_batch, max_seq); each
 request owns a slot.  Per tick:
 
-  1. admit queued requests into free slots (prefill writes the slot's cache
-     rows via dynamic_update_slice — one jitted prefill per admitted
-     request, batched decode never stalls),
+  1. admit queued requests into ALL free slots first (one jitted prefill per
+     request — prompts are ragged — then ONE fixed-arity jitted scatter
+     writes every admitted slot's cache rows at once),
   2. one batched decode step for all active slots,
   3. retire finished requests (eos / max_tokens).
 
-Everything device-side is fixed-shape, so exactly two programs are ever
-compiled (prefill, decode) — no shape churn, which is what keeps a TPU
+Everything device-side is fixed-shape.  Prompts right-pad into power-of-two
+length buckets (attention families only — recurrent/ring-buffer caches
+consume pads), so the compiled-program inventory is bounded independent of
+traffic: one decode, one slot scatter, and at most log2(max_seq) prefill
+buckets — no per-prompt-length shape churn, which is what keeps a TPU
 serving deployment at high duty cycle.
 """
 from __future__ import annotations
@@ -80,13 +83,37 @@ class ServeEngine:
             return lm.decode_step(params, buffers, cfg, tokens, pos, cache,
                                   batch_axes=None)
 
-        def _prefill_one(dyn, tokens, cache1):
+        def _prefill_one(dyn, tokens, cache1, last_idx):
             buffers = merge_buffers(dyn, static)
             return lm.prefill(params, buffers, cfg, tokens, cache1,
-                              batch_axes=None)
+                              batch_axes=None, last_idx=last_idx)
+
+        baxis = lm.cache_batch_axis(cfg)
+
+        def _scatter(big_cache, idx, *ones):
+            # all admitted slot caches in ONE compiled update: stack each
+            # leaf along its batch axis, scatter at idx.  Pad entries index
+            # max_batch and drop (never -1: negative indices WRAP in jax).
+            def upd(big, ax, *xs):
+                stacked = jnp.concatenate(
+                    [jnp.moveaxis(x, ax, 0) for x in xs], axis=0
+                )
+                out = jnp.moveaxis(big, ax, 0).at[idx].set(
+                    stacked.astype(big.dtype), mode="drop"
+                )
+                return jnp.moveaxis(out, 0, ax)
+
+            return jax.tree.map(upd, big_cache, baxis, *ones)
 
         self._decode = jax.jit(_decode, donate_argnums=(3,))
         self._prefill = jax.jit(_prefill_one)
+        self._scatter = jax.jit(_scatter, donate_argnums=(0,))
+        # padded prefill is only sound when no cache state is a function of
+        # the WHOLE padded sequence: recurrent families fold pads into the
+        # terminal state, sliding windows rotate the ring by S
+        self._pad_prompts = (
+            cfg.family not in ("xlstm", "hybrid") and not cfg.sliding_window
+        )
 
     # --- public API ---------------------------------------------------------
 
@@ -101,31 +128,49 @@ class ServeEngine:
 
     # --- engine internals ----------------------------------------------------
 
+    def _bucket_len(self, S: int) -> int:
+        """Smallest power-of-two >= S (min 2, capped at max_seq): prompt
+        shapes collapse to <= log2(max_seq) distinct prefill programs."""
+        L = 2
+        while L < S:
+            L *= 2
+        return min(L, self.max_seq)
+
     def _admit(self):
+        # 1) prefill every admissible request (prompts are ragged, so one
+        #    prefill call each — but padded to power-of-two buckets, so the
+        #    number of COMPILED prefills stays bounded)
+        slot_ids: list[int] = []
+        ones: list = []
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
             S = len(req.prompt)
             assert S < self.max_seq, "prompt longer than max_seq"
+            L = self._bucket_len(S) if self._pad_prompts else S
+            toks = np.zeros((1, L), np.int32)
+            toks[0, :S] = req.prompt
             cache1 = lm.init_cache(self.cfg, 1, self.max_seq)
             logits, cache1 = self._prefill(
-                self._dyn, jnp.asarray(req.prompt)[None, :], cache1
+                self._dyn, jnp.asarray(toks), cache1, jnp.int32(S - 1)
             )
-            # scatter the slot's rows into the big cache at each leaf's
-            # batch axis
-            baxis = lm.cache_batch_axis(self.cfg)
-            self.cache = jax.tree.map(
-                lambda big, one, ax: jax.lax.dynamic_update_slice_in_dim(
-                    big, one.astype(big.dtype), slot, axis=ax
-                ),
-                self.cache, cache1, baxis,
-            )
+            slot_ids.append(slot)
+            ones.append(cache1)
             self.slots[slot] = req
             self.pos[slot] = S
             self.last_token[slot] = int(jnp.argmax(logits[0][: self.cfg.vocab]))
             req.generated.append(int(self.last_token[slot]))
             req._t_admit = time.perf_counter()
+        if not ones:
+            return
+        # 2) ONE batched scatter of all admitted slot caches (fixed arity:
+        #    pad with repeats of the first cache, routed to a dropped index)
+        n = len(ones)
+        ones.extend(ones[0] for _ in range(self.max_batch - n))
+        idx = np.full((self.max_batch,), self.max_batch, np.int32)
+        idx[:n] = slot_ids
+        self.cache = self._scatter(self.cache, jnp.asarray(idx), *ones)
 
     def tick(self) -> list[Request]:
         self._admit()

@@ -209,6 +209,18 @@ class SketchFrequencyTracker:
             "batches_seen": self.batches_seen,
         }
 
+    def export_heads(self, n: int | None = None) -> dict[int, np.ndarray]:
+        """Current SpaceSaving head ids per tracked feature (descending
+        estimated count, at most ``n`` each) — the hot-id set a serve
+        cache materializes (serve/dlrm.py).  Flushes the async fold so
+        the export reflects every observed batch."""
+        self.flush()
+        out: dict[int, np.ndarray] = {}
+        for f in self.tracked:
+            ids, _ = self.features[f].hh.head()
+            out[f] = ids[:n] if n is not None else ids
+        return out
+
     def poll_window(self) -> dict | None:
         """The statistics snapshot of the most recently CLOSED window, once
         (cleared on read) — the Trainer feeds it to the trigger policy."""

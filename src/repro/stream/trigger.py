@@ -70,6 +70,23 @@ def _tv_distance(prev_ids, prev_p, ids, p) -> float:
     return 0.5 * float(np.abs(dense(prev_ids, prev_p) - dense(ids, p)).sum())
 
 
+def head_churn(prev_ids, ids) -> float:
+    """Jaccard distance between two head id SETS (order/count agnostic,
+    negatives = empty slots ignored).  0.0 = identical membership,
+    1.0 = disjoint.  The serve cache refresh policy (serve/dlrm.py)
+    compares its cached head against a fresh tracker export with this —
+    membership is what decides cache coverage, so it is the right churn
+    signal there (the trigger's ``_tv_distance`` weighs probability
+    mass instead)."""
+    prev_ids = np.unique(np.asarray(prev_ids)[np.asarray(prev_ids) >= 0])
+    ids = np.unique(np.asarray(ids)[np.asarray(ids) >= 0])
+    union = np.union1d(prev_ids, ids)
+    if union.size == 0:
+        return 0.0
+    inter = np.intersect1d(prev_ids, ids)
+    return 1.0 - inter.size / union.size
+
+
 class ClusterTrigger:
     """Stateful trigger policy over the tracker's window summaries.
 

@@ -392,6 +392,7 @@ def test_reduced_dlrm_audit_is_green():
     assert report.ok, report.to_json()
     assert [p["name"] for p in report.programs] == [
         "fwd", "grad", "train_step", "train_step_telemetry", "serve_lookup",
+        "serve_dlrm_cold", "serve_dlrm_hit",
     ]
     # the report records the launch counts the budgets pinned
     by_name = {p["name"]: p for p in report.programs}
@@ -401,6 +402,14 @@ def test_reduced_dlrm_audit_is_green():
     assert (
         by_name["train_step_telemetry"]["n_eqns_by_primitive"]["pallas_call"]
         == 2
+    )
+    # serve: ONE fused launch on the cold path, ZERO on a fully-hit batch
+    assert (
+        by_name["serve_dlrm_cold"]["n_eqns_by_primitive"]["pallas_call"] == 1
+    )
+    assert (
+        by_name["serve_dlrm_hit"]["n_eqns_by_primitive"].get("pallas_call", 0)
+        == 0
     )
 
 

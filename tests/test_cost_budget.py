@@ -357,6 +357,7 @@ def test_cli_budget_gate_roundtrip_and_doctored_regression(tmp_path):
     committed = json.load(open(path))
     assert set(committed["programs"]) == {
         "fwd", "grad", "train_step", "train_step_telemetry", "serve_lookup",
+        "serve_dlrm_cold", "serve_dlrm_hit",
     }
 
     # 2. clean gate: current == committed, exits 0, diff all-ok

@@ -75,3 +75,29 @@ def test_queue_longer_than_batch(model):
     done = eng.run()
     assert len(done) == 7
     assert all(len(r.generated) == 3 for r in done)
+
+
+def test_prefill_compile_count_is_bucketed(model):
+    """Mixed-length traffic must not compile one prefill per distinct
+    prompt length: prompts pad to power-of-two buckets, so at most
+    log2(max_seq) prefill programs exist — and bucketing must not change
+    the generated tokens."""
+    cfg, params, buffers = model
+    max_seq = 32
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, 97, size=s).astype(np.int32)
+        for s in range(1, 18)  # 17 distinct lengths spanning 4 buckets
+    ]
+    eng = ServeEngine(cfg, params, buffers, max_batch=4, max_seq=max_seq)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_tokens=3))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert len(done) == len(prompts)
+    n_compiles = eng._prefill._cache_size()
+    assert n_compiles <= int(np.log2(max_seq)), n_compiles
+    # bucketed prefill is semantics-preserving: same tokens as solo runs
+    for i in (0, 7, 16):
+        solo = ServeEngine(cfg, params, buffers, max_batch=1, max_seq=max_seq)
+        solo.submit(Request(uid=0, prompt=prompts[i], max_tokens=3))
+        assert solo.run()[0].generated == done[i].generated
